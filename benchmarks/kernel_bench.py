@@ -1,0 +1,126 @@
+"""Kernel microbenchmarks: correctness re-check + v5e roofline model.
+
+No TPU in this container, so wall-clock numbers are CPU-interpret
+timings (reported for completeness but NOT the score); the meaningful
+output is the modeled v5e time per kernel = max(flops/197T, bytes/819G)
+and the arithmetic intensity, plus allclose deltas vs each ref.py oracle.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _model_time(flops: float, bytes_: float) -> float:
+    return max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
+
+
+def bench_flash_attention() -> list[tuple]:
+    from repro.kernels.flash_attention.kernel import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, H, KV, S, D = 1, 4, 2, 128, 64
+    q = jax.random.normal(jax.random.key(0), (B, H, S, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, KV, S, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, KV, S, D), jnp.float32)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    err = float(jnp.abs(out - attention_ref(q, k, v)).max())
+    # production shape: internlm2 prefill_32k per device
+    bp, hp, sp, dp = 2, 3, 32768, 128
+    flops = 4 * bp * hp * sp * sp * dp / 2      # causal half
+    bytes_ = 2 * bp * hp * sp * dp * 2 * 3      # q,k,v + out, bf16
+    t = _model_time(flops, bytes_)
+    return [("kernel/flash_attention/maxerr", err, "vs ref.py"),
+            ("kernel/flash_attention/v5e_model_ms", t * 1e3,
+             f"AI={flops/bytes_:.0f} flop/B (compute-bound)")]
+
+
+def bench_decode_attention() -> list[tuple]:
+    from repro.kernels.decode_attention.kernel import decode_attention
+    from repro.kernels.decode_attention.ref import decode_ref
+    B, H, KV, S, D = 2, 8, 4, 256, 32
+    q = jax.random.normal(jax.random.key(0), (B, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, KV, S, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, KV, S, D), jnp.float32)
+    out = decode_attention(q, k, v, jnp.int32(201), block_k=64, interpret=True)
+    err = float(jnp.abs(out - decode_ref(q, k, v, jnp.int32(201))).max())
+    # production: decode_32k per device (b=8 local, kv=8, s=32768, d=128)
+    bp, kvp, sp, dp, g = 8, 8, 32768, 128, 6
+    bytes_ = bp * kvp * sp * dp * 2 * 2         # K+V read, bf16
+    flops = 4 * bp * kvp * g * sp * dp
+    t = _model_time(flops, bytes_)
+    return [("kernel/decode_attention/maxerr", err, "vs ref.py"),
+            ("kernel/decode_attention/v5e_model_ms", t * 1e3,
+             f"AI={flops/bytes_:.1f} flop/B (memory-bound; xG from GQA)")]
+
+
+def bench_triple_score() -> list[tuple]:
+    from repro.kernels.triple_score.kernel import triple_score
+    from repro.kernels.triple_score.ref import triple_score_ref
+    N, Dt, Dq, H, Q = 512, 114, 32, 128, 4
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 7)
+    args = (jax.random.normal(ks[0], (N, Dt)), jax.random.normal(ks[1], (Q, Dq)),
+            jax.random.normal(ks[2], (Dt, H)) * 0.1,
+            jax.random.normal(ks[3], (Dq, H)) * 0.1,
+            jax.random.normal(ks[4], (H,)) * 0.1,
+            jax.random.normal(ks[5], (H, 1)) * 0.1, jnp.zeros((1,)))
+    out = triple_score(*args, tile=128, interpret=True)
+    err = float(jnp.abs(out - triple_score_ref(*args)).max())
+    # production: 1M candidate triples x 1 query, H=1024
+    n, dt, h = 1_000_000, 1156, 1024
+    flops = 2 * n * dt * h + 2 * n * h
+    bytes_ = n * dt * 2 + n * 4
+    t = _model_time(flops, bytes_)
+    return [("kernel/triple_score/maxerr", err, "vs ref.py"),
+            ("kernel/triple_score/v5e_model_ms", t * 1e3,
+             f"AI={flops/bytes_:.0f} flop/B")]
+
+
+def bench_skew_metrics() -> list[tuple]:
+    from repro.kernels.skew_metrics.kernel import skew_metrics
+    from repro.kernels.skew_metrics.ref import skew_metrics_ref
+    scores = jnp.sort(jax.random.uniform(jax.random.key(0), (32, 100)),
+                      axis=1)[:, ::-1]
+    out = skew_metrics(scores, interpret=True)
+    ref = skew_metrics_ref(scores)
+    err = float(jnp.abs(out - ref).max())
+    # production: 4096-request batch x K=100; one pass
+    bytes_ = 4096 * 100 * 4 * 2
+    t = _model_time(bytes_ * 6, bytes_)  # ~6 flops/elem, memory-bound
+    return [("kernel/skew_metrics/maxerr", err, "vs ref.py (4 metrics fused)"),
+            ("kernel/skew_metrics/v5e_model_us", t * 1e6, "router fast path")]
+
+
+def bench_segment_reduce() -> list[tuple]:
+    from repro.kernels.segment_reduce.kernel import segment_sum_sorted
+    from repro.kernels.segment_reduce.ref import segment_sum_sorted_ref
+    B, nnz, D = 16, 8, 32
+    rows = jax.random.normal(jax.random.key(0), (B * nnz, D))
+    seg = jnp.repeat(jnp.arange(B), nnz)
+    out = segment_sum_sorted(rows, seg, B, nnz, seg_tile=8, interpret=True)
+    err = float(jnp.abs(out - segment_sum_sorted_ref(rows, seg, B)).max())
+    # production: 65536-batch embedding bag, nnz=16, dim=128
+    b, nz, d = 65536, 16, 128
+    bytes_ = b * nz * d * 4 + b * d * 4
+    flops = 2 * b * nz * d
+    t = _model_time(flops, bytes_)
+    return [("kernel/segment_reduce/maxerr", err, "vs ref.py"),
+            ("kernel/segment_reduce/v5e_model_ms", t * 1e3,
+             f"AI={flops/bytes_:.2f} flop/B (bandwidth-bound)")]
+
+
+def run_all() -> list[tuple]:
+    rows = []
+    for fn in [bench_flash_attention, bench_decode_attention,
+               bench_triple_score, bench_skew_metrics, bench_segment_reduce]:
+        t0 = time.monotonic()
+        rows.extend(fn())
+        rows.append((f"{fn.__name__}/wall_s", time.monotonic() - t0,
+                     "CPU interpret (not a perf number)"))
+    return rows

@@ -1,0 +1,174 @@
+"""Shared KGQA routing experiment harness (paper §4 reconstruction).
+
+Pipeline: synthetic KG + queries -> trained SubgraphRAG scorer -> top-K
+score distributions -> skewness metrics -> routing sweeps, with LLM answer
+quality supplied by a **calibrated oracle** (DESIGN §7.2): no 70B weights
+exist here, so per-(model, dataset) Hit@1/F1 are matched to the paper's
+Table 3 and decomposed over hop counts — larger models degrade less with
+hops (the paper's premise: model scale buys multi-hop reasoning), and a
+retrieval miss (gold edge outside top-K) slashes quality for every model
+(RAG's dependence on retrieval, §2).
+
+All routing math runs on REAL score distributions produced by the real
+scorer over the real (synthetic) KG — only the generator's answer
+correctness is modeled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import skewness
+from repro.core.cost import PAPER_QUALITY
+from repro.retrieval import scorer as sc
+from repro.retrieval import synthetic
+
+#: hop-degradation slope per model tier (larger model = flatter slope).
+#: Slopes are set so that, after matching each model's AGGREGATE Hit@1 to
+#: Table 3, the small tier meets or slightly beats the large tier on
+#: 1-hop queries while losing decisively on multi-hop — the structure the
+#: paper's routing results imply (Figs 5/6 show skew-routing EXCEEDING
+#: all-large quality at ~0.5-0.7 call ratio, which is only possible if
+#: the small model wins some easy queries).
+HOP_SLOPES = {
+    "qwen7b": 0.20, "qwen14b": 0.15, "qwen72b": 0.085,
+    "llama8b": 0.19, "llama70b": 0.08,
+}
+RETRIEVAL_MISS_FACTOR = 0.25
+
+
+@functools.lru_cache(maxsize=4)
+def build_experiment(dataset: str = "cwq", n_queries: int = 600,
+                     n_entities: int = 12_000, train_steps: int = 200,
+                     seed: int = 0):
+    """Build KG + scorer + per-query retrieval artifacts (cached)."""
+    data = synthetic.make_dataset(dataset, n_queries=n_queries,
+                                  n_entities=n_entities, seed=seed)
+    cfg = sc.ScorerConfig(lr=2e-3)
+    params = sc.train_scorer(data, cfg, n_steps=train_steps, seed=seed)
+    records = []
+    for q in data.queries:
+        edges, probs = sc.retrieve(params, data.kg, data.entity_emb,
+                                   data.relation_emb, q, cfg)
+        if len(probs) < 10:
+            continue
+        gold_rank = next((i for i, e in enumerate(edges)
+                          if e in q.gold_edges), None)
+        records.append({
+            "hops": q.hops,
+            "scores": probs,
+            "gold_rank": gold_rank,
+            "answer_retrieved": gold_rank is not None,
+        })
+    return data, params, cfg, records
+
+
+def _hop_quality(model: str, dataset: str, metric: str) -> dict[int, float]:
+    """Per-hop accuracy such that the hop-mix-weighted mean matches the
+    paper's Table 3 aggregate for (model, dataset)."""
+    overall = PAPER_QUALITY[dataset][model][metric] / 100.0
+    mix = synthetic.HOP_MIX[dataset]
+    slope = HOP_SLOPES[model]
+    # p(h) = base - slope*(h-1); solve base from the mix.
+    mean_offset = sum(w * slope * (h - 1) for h, w in mix.items())
+    base = overall + mean_offset
+    return {h: float(np.clip(base - slope * (h - 1), 0.02, 0.98))
+            for h in range(1, 5)}
+
+
+def oracle_quality(records, model: str, dataset: str,
+                   metric: str = "hit1") -> np.ndarray:
+    """Expected per-query quality for one generator tier."""
+    table = _hop_quality(model, dataset, metric)
+    out = []
+    for r in records:
+        p = table[min(r["hops"], 4)]
+        if not r["answer_retrieved"]:
+            p *= RETRIEVAL_MISS_FACTOR
+        elif r["gold_rank"] is not None and r["gold_rank"] > 20:
+            p *= 0.7  # answer buried deep in the context
+        out.append(p)
+    return np.asarray(out)
+
+
+def difficulty_matrix(records, p_cdf: float = 0.95) -> dict[str, np.ndarray]:
+    """All four difficulty metrics for every record (larger = harder)."""
+    pad_k = max(len(r["scores"]) for r in records)
+    mat = np.zeros((len(records), pad_k), np.float32)
+    mask = np.zeros((len(records), pad_k), bool)
+    for i, r in enumerate(records):
+        k = len(r["scores"])
+        mat[i, :k] = r["scores"]
+        mask[i, :k] = True
+    s, m = jnp.asarray(mat), jnp.asarray(mask)
+    return {
+        "area": np.asarray(skewness.difficulty_area(s, m)),
+        "cumulative": np.asarray(skewness.difficulty_cumulative(s, p_cdf, m)),
+        "entropy": np.asarray(skewness.difficulty_entropy(s, m)),
+        "gini": np.asarray(skewness.difficulty_gini(s, m)),
+    }
+
+
+@dataclasses.dataclass
+class RoutingCurve:
+    metric: str
+    ratios: np.ndarray
+    quality: np.ndarray
+
+
+def routing_curves(records, dataset: str, small: str, large: str,
+                   quality_metric: str = "hit1", n_points: int = 11,
+                   p_cdf: float = 0.95) -> dict[str, RoutingCurve]:
+    """Paper Figs 5/6/8: quality vs large-LLM call ratio, per skew metric
+    + random-mixing baseline + omniscient oracle."""
+    qs = oracle_quality(records, small, dataset, quality_metric)
+    ql = oracle_quality(records, large, dataset, quality_metric)
+    diffs = difficulty_matrix(records, p_cdf)
+    n = len(records)
+    curves: dict[str, RoutingCurve] = {}
+    fractions = np.linspace(0, 1, n_points)
+    for name, d in diffs.items():
+        order = np.argsort(-d, kind="stable")   # hardest first
+        ratios, quality = [], []
+        for f in fractions:
+            cut = int(round(f * n))
+            sel = np.zeros(n, bool)
+            sel[order[:cut]] = True
+            ratios.append(sel.mean())
+            quality.append(float(np.where(sel, ql, qs).mean()))
+        curves[name] = RoutingCurve(name, np.asarray(ratios), np.asarray(quality))
+    # random mixing baseline (mean over shuffles)
+    rng = np.random.default_rng(0)
+    rand_q = []
+    for f in fractions:
+        cut = int(round(f * n))
+        vals = []
+        for _ in range(16):
+            sel = np.zeros(n, bool)
+            sel[rng.permutation(n)[:cut]] = True
+            vals.append(float(np.where(sel, ql, qs).mean()))
+        rand_q.append(float(np.mean(vals)))
+    curves["random"] = RoutingCurve("random", fractions, np.asarray(rand_q))
+    # omniscient oracle upper bound
+    gain_order = np.argsort(-(ql - qs), kind="stable")
+    oq = []
+    for f in fractions:
+        cut = int(round(f * n))
+        sel = np.zeros(n, bool)
+        sel[gain_order[:cut]] = True
+        oq.append(float(np.where(sel, ql, qs).mean()))
+    curves["oracle"] = RoutingCurve("oracle", fractions, np.asarray(oq))
+    return curves
+
+
+def call_ratio_at_parity(curve: RoutingCurve, target_quality: float) -> float:
+    """Smallest large-call ratio whose quality >= target (paper's headline:
+    ~0.5 at all-large parity)."""
+    for r, q in zip(curve.ratios, curve.quality):
+        if q >= target_quality - 1e-9:
+            return float(r)
+    return 1.0

@@ -1,0 +1,202 @@
+"""One benchmark per paper table/figure, on the synthetic KGQA pipeline.
+
+Each ``fig_*``/``table_*`` function returns a list of (name, value,
+derived-note) rows that benchmarks/run.py renders as CSV, and asserts the
+paper's qualitative claim it reproduces (so `python -m benchmarks.run`
+doubles as an integration test of the reproduction).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import kgqa_experiment as X
+from repro.core.cost import (CostModel, PAPER_COST_PER_MTOK,
+                             TOKENS_BARE_QUESTION, TOKENS_PER_TRIPLE)
+
+
+def fig2a_token_cost() -> list[tuple]:
+    """Fig 2a: input-token blowup vs number of retrieved triples."""
+    cm = CostModel()
+    rows = []
+    for n in [0, 25, 50, 100, 200]:
+        toks = cm.input_tokens(n)
+        rows.append((f"fig2a/tokens_n{n}", toks,
+                     f"{toks / cm.input_tokens(0):.1f}x bare question"))
+    blowup = cm.input_tokens(100) / cm.input_tokens(0)
+    assert blowup > 25, f"expected >25x token blowup at 100 triples, got {blowup:.1f}"
+    return rows
+
+
+def fig2b_scale_tradeoff() -> list[tuple]:
+    """Fig 2b / Table 4: cost-vs-quality across model scales."""
+    cm = CostModel()
+    rows = []
+    for model in ["qwen7b", "qwen14b", "qwen32b", "qwen72b"]:
+        c = cm.request_cost(model) * 1e3
+        rows.append((f"fig2b/cost_per_kquery_{model}", c,
+                     f"${PAPER_COST_PER_MTOK[model]}/Mtok"))
+    r72 = cm.request_cost("qwen72b") / cm.request_cost("qwen14b")
+    assert r72 > 4, "72b should cost >4x 14b (paper: ~6-7x)"
+    return rows
+
+
+def fig3_skew_examples(records) -> list[tuple]:
+    """Fig 3/10: high- vs low-skew score distributions exist side by side."""
+    from repro.core import skewness
+    import jax.numpy as jnp
+    areas = []
+    for r in records:
+        areas.append(float(skewness.area_metric(jnp.asarray(r["scores"])[None])[0]))
+    areas = np.asarray(areas)
+    rows = [("fig3/area_p10", float(np.percentile(areas, 10)), "high-skew tail"),
+            ("fig3/area_p90", float(np.percentile(areas, 90)), "low-skew tail")]
+    # CWQ spans ~5x (multi-hop tail); WebQSP is 1-2 hop only so its spread
+    # is narrower (paper Fig 10 shows the same compression) — assert the
+    # qualitative claim at 2x.
+    assert np.percentile(areas, 90) > 2 * np.percentile(areas, 10), \
+        "score distributions should span a wide skewness range (paper Fig 3)"
+    return rows
+
+
+def fig4_skew_vs_difficulty(records) -> list[tuple]:
+    """Fig 4/12: skewness correlates with difficulty (hops + answer rank).
+
+    Reports mean area per hop bucket + a one-way ANOVA F statistic over
+    answer-position groups split by skewness quartile (paper Fig 12).
+    """
+    diffs = X.difficulty_matrix(records)["area"]
+    hops = np.asarray([r["hops"] for r in records])
+    rows = []
+    means = {}
+    for h in sorted(set(hops)):
+        means[h] = float(diffs[hops == h].mean())
+        rows.append((f"fig4/mean_area_hops{h}", means[h],
+                     f"n={int((hops == h).sum())}"))
+    ks = sorted(means)
+    assert means[ks[-1]] > means[ks[0]], \
+        "multi-hop queries must show lower skewness (larger area)"
+    # ANOVA of answer position across skewness quartiles
+    anspos = np.asarray([r["gold_rank"] if r["gold_rank"] is not None
+                         else len(r["scores"]) for r in records], float)
+    quart = np.digitize(diffs, np.percentile(diffs, [25, 50, 75]))
+    groups = [anspos[quart == i] for i in range(4) if (quart == i).sum() > 1]
+    grand = anspos.mean()
+    ss_b = sum(len(g) * (g.mean() - grand) ** 2 for g in groups)
+    ss_w = sum(((g - g.mean()) ** 2).sum() for g in groups)
+    df_b, df_w = len(groups) - 1, len(anspos) - len(groups)
+    f_stat = (ss_b / df_b) / max(ss_w / df_w, 1e-9)
+    rows.append(("fig4/anova_F", float(f_stat), f"df=({df_b},{df_w})"))
+    return rows
+
+
+def fig56_routing(records, dataset: str, small: str, large: str,
+                  quality_metric: str = "hit1",
+                  strict_parity: bool = True) -> list[tuple]:
+    """Figs 5/6: all four skew metrics beat random mixing; ~half the large
+    calls at parity with all-large inference.
+
+    ``strict_parity=False`` for the cross-family pair (paper Fig 8): there
+    the claim is "+~3% over random mixing at ~5% extra cost", not a call-
+    ratio reduction at parity — the parity ratio is reported, not asserted.
+    """
+    curves = X.routing_curves(records, dataset, small, large, quality_metric)
+    rows = []
+    rand = curves["random"]
+    all_large_q = curves["random"].quality[-1]
+    for name in ["area", "cumulative", "entropy", "gini"]:
+        c = curves[name]
+        # area under the routing curve vs random (quality advantage)
+        adv = float(np.trapezoid(c.quality - np.interp(c.ratios, rand.ratios,
+                                                       rand.quality), c.ratios))
+        parity = X.call_ratio_at_parity(c, all_large_q * 0.995)
+        rows.append((f"{dataset}/{small}->{large}/{name}/auc_vs_random",
+                     adv, f"parity_ratio={parity:.2f}"))
+        assert adv > 0, f"{name} routing must beat random mixing ({dataset})"
+    best_parity = min(X.call_ratio_at_parity(curves[m], all_large_q * 0.995)
+                      for m in ["area", "cumulative", "entropy", "gini"])
+    rows.append((f"{dataset}/{small}->{large}/best_parity_ratio",
+                 best_parity, "paper: ~0.5 (synthetic scorer separates "
+                 "slightly less cleanly than SubgraphRAG on real CWQ)"))
+    if strict_parity:
+        assert best_parity <= 0.8, \
+            f"expected large-call reduction at parity, got {best_parity}"
+    return rows
+
+
+def fig7_multi_tier(records, dataset: str = "cwq") -> list[tuple]:
+    """Fig 7: adding a medium tier improves the cost-quality tradeoff."""
+    qs = X.oracle_quality(records, "qwen7b", dataset)
+    qm = X.oracle_quality(records, "qwen14b", dataset)
+    ql = X.oracle_quality(records, "qwen72b", dataset)
+    d = X.difficulty_matrix(records)["gini"]
+    cm = CostModel()
+    cost = {m: cm.request_cost(m) for m in ["qwen7b", "qwen14b", "qwen72b"]}
+    order = np.argsort(-d, kind="stable")
+    n = len(records)
+
+    def two_tier(f_large):
+        sel = np.zeros(n, bool)
+        sel[order[: int(f_large * n)]] = True
+        q = float(np.where(sel, ql, qs).mean())
+        c = float(np.where(sel, cost["qwen72b"], cost["qwen7b"]).mean())
+        return q, c
+
+    def three_tier(f_large, f_med):
+        tiers = np.zeros(n, np.int32)
+        tiers[order[: int(f_large * n)]] = 2
+        tiers[order[int(f_large * n): int((f_large + f_med) * n)]] = 1
+        q = float(np.select([tiers == 2, tiers == 1], [ql, qm], qs).mean())
+        c = float(np.select([tiers == 2, tiers == 1],
+                            [cost["qwen72b"], cost["qwen14b"]],
+                            cost["qwen7b"]).mean())
+        return q, c
+
+    q2, c2 = two_tier(0.3)
+    q3, c3 = three_tier(0.2, 0.4)
+    rows = [("fig7/two_tier_quality", q2, f"cost=${c2*1e3:.3f}/kq"),
+            ("fig7/three_tier_quality", q3, f"cost=${c3*1e3:.3f}/kq")]
+    assert q3 >= q2 - 0.005 and c3 < c2, \
+        "medium tier should improve the cost/quality frontier (paper Fig 7)"
+    return rows
+
+
+def fig9_cumulative_p(records, dataset: str = "cwq") -> list[tuple]:
+    """Fig 9: cumulative-threshold routing beats random for P in
+    [0.35, 0.95] (the paper's robustness claim).
+
+    Deviation note (EXPERIMENTS.md §Paper-validation): the paper
+    additionally finds P=0.95 steadily ahead of P=0.35; on the synthetic
+    scorer the ordering is mixed — our score TAILS are noisier than
+    SubgraphRAG's on real CWQ, and high P reads deep into the tail. The
+    robustness claim (every P beats random) reproduces; the P-ordering
+    claim is scorer-dependent and is reported, not asserted.
+    """
+    rows = []
+    aucs = {}
+    for p in [0.35, 0.65, 0.95]:
+        curves = X.routing_curves(records, dataset, "qwen7b", "qwen72b",
+                                  p_cdf=p)
+        c, rand = curves["cumulative"], curves["random"]
+        auc = float(np.trapezoid(c.quality - np.interp(
+            c.ratios, rand.ratios, rand.quality), c.ratios))
+        aucs[p] = auc
+        rows.append((f"fig9/auc_P{p}", auc, "vs random"))
+        assert auc > 0, f"cumulative routing must beat random at P={p}"
+    rows.append(("fig9/P_ordering", float(aucs[0.95] - aucs[0.35]),
+                 "paper: positive; scorer-dependent here (see note)"))
+    return rows
+
+
+def table3_baselines(records, dataset: str) -> list[tuple]:
+    """Table 3: all-small / all-large aggregate quality (oracle check)."""
+    rows = []
+    for model in (["qwen7b", "qwen72b", "llama8b", "llama70b"]):
+        q = float(X.oracle_quality(records, model, dataset).mean())
+        ref = X.PAPER_QUALITY[dataset][model]["hit1"] / 100.0
+        rows.append((f"table3/{dataset}/{model}", q, f"paper={ref:.3f}"))
+        assert abs(q - ref) < 0.08, \
+            f"oracle {model}@{dataset} drifted from Table 3: {q} vs {ref}"
+    return rows

@@ -1,0 +1,71 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+result JSONs.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "dryrun_results"
+
+
+def load(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | compile | peak GiB/dev | "
+             "collective ops | status |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - "
+                         f"| - | FAIL: {r.get('error', '?')[:60]} |")
+            continue
+        peak = r["memory"]["peak_device_bytes"] / 2 ** 30
+        nc = r["collectives"]["n_ops"]
+        flag = "ok" if peak <= 16 else "ok (>16 GiB, see notes)"
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                     f"{r['compile_s']}s | {peak:.2f} | {nc} | {flag} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+             "MODEL_FLOPS | useful ratio | MFU bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"{rl['dominant']} | {rl.get('model_flops', 0):.2e} | "
+            f"{rl.get('useful_flops_ratio', 0):.3f} | "
+            f"{rl.get('mfu_upper_bound', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    print("## Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table([r for r in recs if r.get("mesh") == "single"]))
+
+
+if __name__ == "__main__":
+    main()

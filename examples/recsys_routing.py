@@ -1,0 +1,53 @@
+"""Beyond-paper generalization (DESIGN §5): SkewRoute for recsys ranking.
+
+The paper routes KG-RAG queries on retrieval-score skewness; the same
+math applies to ANY per-request candidate-score distribution. Here the
+small DeepFM ranker scores candidate items per request; confident
+requests (skewed scores — one clear winner) are served from it, while
+ambiguous requests (flat scores) escalate to the large DCN-v2 ranker.
+
+  PYTHONPATH=src python examples/recsys_routing.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RouterConfig, calibrate_threshold, route_binary
+from repro.models import recsys as rec
+
+
+def main():
+    rng = np.random.default_rng(0)
+    small_cfg = rec.RecsysConfig(
+        name="deepfm-small", model="deepfm", n_dense=0, n_sparse=8,
+        embed_dim=10, vocab_sizes=(2000,) * 8, deep_mlp=(64, 64),
+        interaction="fm")
+    small = rec.init_params(jax.random.key(0), small_cfg)
+
+    # score 64 requests x 100 candidate items with the small ranker
+    n_req, n_cand = 64, 100
+    user_fields = rng.integers(0, 2000, (n_req, small_cfg.n_sparse))
+    cand_ids = rng.integers(0, small_cfg.padded_vocab, (n_cand,))
+    batches = {"sparse": jnp.asarray(user_fields, jnp.int32)}
+    scores = rec.retrieval_scores(small, small_cfg, batches,
+                                  jnp.asarray(cand_ids, jnp.int32))
+    scores_desc = jnp.sort(scores, axis=1)[:, ::-1]
+
+    theta = calibrate_threshold(scores_desc, target_large_ratio=0.3,
+                                metric="entropy")
+    router = RouterConfig(metric="entropy", thresholds=(theta,))
+    escalate = np.asarray(route_binary(scores_desc, router))
+    print(f"requests: {n_req}; escalated to the large ranker: "
+          f"{escalate.sum()} ({escalate.mean():.0%}; budget 30%)")
+    ent = np.asarray(
+        __import__("repro.core.skewness", fromlist=["x"]).entropy_metric(scores_desc))
+    print(f"mean score-entropy served-small: {ent[~escalate].mean():.3f} "
+          f"vs escalated: {ent[escalate].mean():.3f}")
+    assert ent[escalate].mean() > ent[~escalate].mean()
+    print("flat-score (ambiguous) requests escalate; confident ones stay — "
+          "the paper's routing signal transfers to ranking.")
+
+
+if __name__ == "__main__":
+    main()

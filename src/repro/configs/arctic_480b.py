@@ -1,0 +1,29 @@
+"""arctic-480b: 35L, d_model 7168, 56 heads (GQA kv=8), expert d_ff 4864,
+vocab 32000, MoE 128 experts top-2 + dense residual branch
+[hf:Snowflake/snowflake-arctic-base; hf]. XL serving tier.
+
+Dense residual: Arctic runs a small dense FFN in parallel with the routed
+experts -> MoEConfig.shared_expert=True with the dense d_ff. Adafactor w/
+bf16 momentum: Adam fp32 states for ~467B params (3.7 TB) cannot fit
+256 x 16 GB (DESIGN §4)."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.layers import LMConfig, MoEConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = LMConfig(
+    name="arctic-480b", n_layers=35, d_model=7168, n_heads=56,
+    n_kv_heads=8, head_dim=128, d_ff=4864, vocab=32000,
+    activation="swiglu",
+    moe=MoEConfig(n_experts=128, top_k=2, d_ff=4864, capacity_factor=1.25,
+                  shared_expert=True),
+    rope_theta=10000.0, tie_embeddings=False, dtype=jnp.bfloat16)
+
+# accum 8: per-microbatch activation/dispatch temporaries are the peak-
+# memory driver at 480B scale (dry-run: 33.5 GiB/dev without accumulation).
+ARCH = ArchSpec(arch_id="arctic-480b", family="lm", config=CONFIG,
+                optimizer=OptimizerConfig(name="adafactor", lr=1e-4,
+                                          momentum_dtype=jnp.bfloat16),
+                source="hf:Snowflake/snowflake-arctic-base; hf",
+                accum_steps=8)

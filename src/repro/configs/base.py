@@ -1,0 +1,361 @@
+"""Architecture registry plumbing: ArchSpec + per-family cell builders.
+
+Every assigned architecture file exports ``ARCH: ArchSpec``. A *cell* is
+one (architecture x input-shape) pair; ``build_cell`` returns everything
+the dry-run / launcher needs to lower it on the active mesh:
+
+    fn            step callable (closed over configs)
+    args          tuple of ShapeDtypeStruct pytrees (NO device allocation)
+    in_specs      PartitionSpec pytrees matching args
+    out_specs     PartitionSpec pytree or None (let GSPMD infer)
+    donate        argnums to donate (state/cache buffers)
+
+The same builders are used with real arrays by examples/ and launch/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tfm
+from repro.models.layers import LMConfig
+from repro.models.gnn import GNNConfig
+from repro.models.recsys import RecsysConfig
+from repro.training import optimizer as opt_lib
+from repro.training import train_loop
+
+# ---------------------------------------------------------------------------
+# Shape tables (assigned per family)
+# ---------------------------------------------------------------------------
+
+LM_SHAPES: dict[str, dict] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+# Edge arrays shard over (pod, data); counts pad up to a multiple of 512
+# (padded edges hit the dummy node slot — segment.pad_edges semantics).
+GNN_SHAPES: dict[str, dict] = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10752,
+                          n_edges_real=10556, d_feat=1433, n_classes=7,
+                          loss="node"),
+    "minibatch_lg": dict(kind="train", n_nodes=169_984, n_edges=168_960,
+                         d_feat=602, n_classes=41, loss="node",
+                         note="fanout-(15,10) sampled subgraph of the "
+                              "232,965-node / 114.6M-edge graph"),
+    "ogb_products": dict(kind="train", n_nodes=2_449_029, n_edges=61_859_328,
+                         n_edges_real=61_859_140, d_feat=100, n_classes=47,
+                         loss="node"),
+    "molecule": dict(kind="train", n_graphs=128, nodes_per_graph=30,
+                     edges_per_graph=64, d_feat=32, n_classes=2, loss="graph"),
+}
+
+RECSYS_SHAPES: dict[str, dict] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                      # lm | gnn | recsys
+    config: Any                      # LMConfig | GNNConfig | RecsysConfig
+    optimizer: opt_lib.OptimizerConfig
+    source: str                      # citation tag from the assignment
+    accum_steps: int = 1             # gradient accumulation (train shapes)
+
+    @property
+    def shapes(self) -> dict[str, dict]:
+        return {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                "recsys": RECSYS_SHAPES}[self.family]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    kind: str
+    fn: Callable
+    args: tuple
+    in_specs: tuple
+    out_specs: Any
+    donate: tuple[int, ...]
+    meta: dict
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _batch_axes(global_batch: int) -> Optional[str]:
+    """Logical batch axis, or None when batch can't shard (batch==1)."""
+    return "batch" if global_batch > 1 else None
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_state_specs(cfg: LMConfig, opt_cfg: opt_lib.OptimizerConfig):
+    params = tfm.param_spec(cfg)
+    state = jax.eval_shape(lambda p: train_loop.init_train_state(p, opt_cfg), params)
+    p_pspecs = shd.tree_pspecs(params)
+    state_pspecs = {
+        "params": p_pspecs,
+        "opt": opt_lib.state_pspecs(params, p_pspecs, opt_cfg),
+        "step": P(),
+    }
+    return params, state, p_pspecs, state_pspecs
+
+
+def build_lm_cell(arch: ArchSpec, shape_id: str) -> Cell:
+    cfg: LMConfig = arch.config
+    sh = LM_SHAPES[shape_id]
+    b, s = sh["global_batch"], sh["seq_len"]
+    batch_ax = _batch_axes(b)
+
+    if sh["kind"] == "train":
+        params, state, _, state_pspecs = _lm_state_specs(cfg, arch.optimizer)
+        step = train_loop.make_train_step(
+            functools.partial(_lm_loss, cfg=cfg), arch.optimizer,
+            accum_steps=arch.accum_steps)
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        batch_specs = {"tokens": shd.spec_for(batch_ax, None),
+                       "labels": shd.spec_for(batch_ax, None)}
+        return Cell(arch.arch_id, shape_id, "train", step, (state, batch),
+                    (state_pspecs, batch_specs), None, donate=(0,),
+                    meta=dict(model_flops=6 * cfg.n_active_params * b * s,
+                              tokens=b * s))
+
+    params = tfm.param_spec(cfg)
+    p_pspecs = shd.tree_pspecs(params)
+
+    if sh["kind"] == "prefill":
+        fn = functools.partial(_lm_prefill, cfg=cfg)
+        tokens = _sds((b, s), jnp.int32)
+        return Cell(arch.arch_id, shape_id, "prefill", fn, (params, tokens),
+                    (p_pspecs, shd.spec_for(batch_ax, None)), None, donate=(),
+                    meta=dict(model_flops=2 * cfg.n_active_params * b * s,
+                              tokens=b * s))
+
+    # decode: one new token against a seq-long cache
+    cache = tfm.cache_spec(cfg, b, s)
+    cache_spec_leaf = _decode_cache_pspec(b)
+    cache_specs = {"k": cache_spec_leaf, "v": cache_spec_leaf}
+    fn = functools.partial(_lm_decode, cfg=cfg)
+    tokens = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return Cell(arch.arch_id, shape_id, "decode", fn,
+                (params, cache, tokens, pos),
+                (p_pspecs, cache_specs, shd.spec_for(batch_ax, None), P()),
+                None, donate=(1,),
+                meta=dict(model_flops=2 * cfg.n_active_params * b
+                          + 2 * cfg.n_layers * cfg.kv_dim * 2 * s * b,
+                          tokens=b))
+
+
+def _decode_cache_pspec(batch: int) -> P:
+    """Cache [L, B, S, KVD]: batch over data axes + seq over model (split-KV
+    flash-decode); for batch==1 spread seq across EVERY mesh axis."""
+    mesh = shd.active_mesh()
+    if mesh is None:
+        return P()
+    names = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    model = ("model",) if "model" in names else ()
+    if batch > 1:
+        return P(None, dp or None, model or None, None)
+    seq = dp + model
+    return P(None, None, seq or None, None)
+
+
+def _lm_loss(params, batch, cfg: LMConfig):
+    return tfm.train_loss(params, batch, cfg)
+
+
+def _lm_prefill(params, tokens, cfg: LMConfig):
+    return tfm.prefill(params, tokens, cfg)
+
+
+def _lm_decode(params, cache, tokens, pos, cfg: LMConfig):
+    return tfm.decode_step(params, cache, tokens, pos, cfg)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def build_gnn_cell(arch: ArchSpec, shape_id: str) -> Cell:
+    cfg: GNNConfig = arch.config
+    sh = GNN_SHAPES[shape_id]
+
+    if sh["loss"] == "graph":
+        n_nodes = sh["n_graphs"] * sh["nodes_per_graph"]
+        n_edges = sh["n_graphs"] * sh["edges_per_graph"]
+        batch = {
+            "feats": _sds((n_nodes, sh["d_feat"]), jnp.float32),
+            "src": _sds((n_edges,), jnp.int32),
+            "dst": _sds((n_edges,), jnp.int32),
+            "graph_ids": _sds((n_nodes,), jnp.int32),
+            "labels": _sds((sh["n_graphs"],), jnp.int32),
+        }
+        def loss(params, b, cfg=cfg, sh=sh):
+            return gnn_lib.graph_loss(params, cfg, b, sh["d_feat"], sh["n_classes"])
+    else:
+        batch = {
+            "feats": _sds((sh["n_nodes"], sh["d_feat"]), jnp.float32),
+            "src": _sds((sh["n_edges"],), jnp.int32),
+            "dst": _sds((sh["n_edges"],), jnp.int32),
+            "labels": _sds((sh["n_nodes"],), jnp.int32),
+            "label_mask": _sds((sh["n_nodes"],), jnp.bool_),
+        }
+        def loss(params, b, cfg=cfg, sh=sh):
+            return gnn_lib.node_loss(params, cfg, b, sh["d_feat"], sh["n_classes"])
+
+    params = jax.eval_shape(
+        lambda k: gnn_lib.init_params(k, cfg, sh["d_feat"], sh["n_classes"]),
+        jax.random.key(0))
+    state = jax.eval_shape(
+        lambda p: train_loop.init_train_state(p, arch.optimizer), params)
+    p_pspecs = shd.tree_pspecs(params)
+    state_pspecs = {"params": p_pspecs,
+                    "opt": opt_lib.state_pspecs(params, p_pspecs, arch.optimizer),
+                    "step": P()}
+    # Edge-parallel GNN: edge arrays shard over (pod, data); node arrays
+    # (features, labels, masks, graph ids) are replicated in the baseline.
+    edge_spec = shd.spec_for("edge")
+    batch_specs = {k: (edge_spec if k in ("src", "dst")
+                       else P(*([None] * v.ndim)))
+                   for k, v in batch.items()}
+
+    step = train_loop.make_train_step(loss, arch.optimizer)
+    n_edges = batch["src"].shape[0]
+    d_msg = cfg.n_heads * cfg.d_hidden
+    return Cell(arch.arch_id, shape_id, "train", step, (state, batch),
+                (state_pspecs, batch_specs), None, donate=(0,),
+                meta=dict(model_flops=6 * n_edges * d_msg
+                          + 6 * batch["feats"].shape[0] * sh["d_feat"] * d_msg,
+                          tokens=batch["feats"].shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_specs(cfg: RecsysConfig, batch: dict, batch_ax):
+    specs = {}
+    for k, v in batch.items():
+        specs[k] = shd.spec_for(*([batch_ax] + [None] * (v.ndim - 1)))
+    return specs
+
+
+def recsys_batch_spec(cfg: RecsysConfig, b: int, with_labels: bool) -> dict:
+    batch = {}
+    if cfg.model == "dien":
+        batch.update(
+            user_id=_sds((b,), jnp.int32),
+            target_item=_sds((b,), jnp.int32),
+            target_cat=_sds((b,), jnp.int32),
+            hist_items=_sds((b, cfg.seq_len), jnp.int32),
+            hist_cats=_sds((b, cfg.seq_len), jnp.int32),
+            hist_mask=_sds((b, cfg.seq_len), jnp.bool_),
+        )
+    else:
+        batch["sparse"] = _sds((b, cfg.n_sparse), jnp.int32)
+        if cfg.n_dense:
+            batch["dense"] = _sds((b, cfg.n_dense), jnp.float32)
+    if with_labels:
+        batch["labels"] = _sds((b,), jnp.float32)
+    return batch
+
+
+def build_recsys_cell(arch: ArchSpec, shape_id: str) -> Cell:
+    cfg: RecsysConfig = arch.config
+    sh = RECSYS_SHAPES[shape_id]
+    b = sh["batch"]
+    batch_ax = _batch_axes(b)
+
+    params = jax.eval_shape(lambda k: rec_lib.init_params(k, cfg),
+                            jax.random.key(0))
+    p_pspecs = shd.tree_pspecs(params)
+    # dense-FLOPs proxy: MLP/cross/interaction work per example
+    mlp_dims = ((cfg.n_dense,) + cfg.bot_mlp, cfg.top_mlp, cfg.deep_mlp)
+    dense_flops = sum(2 * a * bb for stack in mlp_dims
+                      for a, bb in zip(stack[:-1], stack[1:]))
+    dense_flops += cfg.n_cross_layers * 2 * (cfg.n_dense + cfg.n_sparse * cfg.embed_dim) ** 2
+    if cfg.model == "dien":
+        dense_flops += cfg.seq_len * 2 * (2 * cfg.embed_dim + cfg.gru_dim) * 3 * cfg.gru_dim * 2
+
+    if sh["kind"] == "train":
+        state = jax.eval_shape(
+            lambda p: train_loop.init_train_state(p, arch.optimizer), params)
+        state_pspecs = {"params": p_pspecs,
+                        "opt": opt_lib.state_pspecs(params, p_pspecs, arch.optimizer),
+                        "step": P()}
+        batch = recsys_batch_spec(cfg, b, with_labels=True)
+        step = train_loop.make_train_step(
+            lambda p, bt: rec_lib.loss(p, cfg, bt), arch.optimizer)
+        return Cell(arch.arch_id, shape_id, "train", step, (state, batch),
+                    (state_pspecs, _recsys_batch_specs(cfg, batch, batch_ax)),
+                    None, donate=(0,),
+                    meta=dict(model_flops=6 * dense_flops * b, tokens=b))
+
+    if sh["kind"] == "serve":
+        batch = recsys_batch_spec(cfg, b, with_labels=False)
+        fn = lambda p, bt: rec_lib.forward(p, cfg, bt)
+        return Cell(arch.arch_id, shape_id, "serve", fn, (params, batch),
+                    (p_pspecs, _recsys_batch_specs(cfg, batch, batch_ax)),
+                    None, donate=(),
+                    meta=dict(model_flops=2 * dense_flops * b, tokens=b))
+
+    # retrieval: 1 user x 1M candidates
+    batch = recsys_batch_spec(cfg, b, with_labels=False)
+    cand = _sds((sh["n_candidates"],), jnp.int32)
+    fn = lambda p, bt, c: rec_lib.retrieval_scores(p, cfg, bt, c)
+    return Cell(arch.arch_id, shape_id, "retrieval", fn, (params, batch, cand),
+                (p_pspecs, _recsys_batch_specs(cfg, batch, batch_ax),
+                 shd.spec_for("candidate")), None, donate=(),
+                meta=dict(model_flops=2 * sh["n_candidates"] * cfg.embed_dim * b,
+                          tokens=b))
+
+
+# ---------------------------------------------------------------------------
+# Entry
+# ---------------------------------------------------------------------------
+
+_BUILDERS = {"lm": build_lm_cell, "gnn": build_gnn_cell,
+             "recsys": build_recsys_cell}
+
+
+def build_cell(arch: ArchSpec, shape_id: str) -> Cell:
+    if shape_id not in arch.shapes:
+        raise KeyError(f"{arch.arch_id} has no shape {shape_id!r}; "
+                       f"valid: {sorted(arch.shapes)}")
+    return _BUILDERS[arch.family](arch, shape_id)
+
+
+def input_specs(arch: ArchSpec, shape_id: str) -> tuple:
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, shardable, no device allocation (the dry-run
+    contract). Returns the full argument tuple the cell's step takes
+    (state/params included; the trailing entries are the data batch)."""
+    return build_cell(arch, shape_id).args

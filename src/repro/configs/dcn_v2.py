@@ -1,0 +1,17 @@
+"""dcn-v2: 13 dense + 26 sparse, embed 16, 3 full-rank cross layers,
+deep MLP 1024-1024-512, parallel structure [arXiv:2008.13535; paper].
+Criteo-Kaggle vocabulary."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.recsys import CRITEO_KAGGLE_VOCABS, RecsysConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = RecsysConfig(
+    name="dcn-v2", model="dcn_v2", n_dense=13, n_sparse=26, embed_dim=16,
+    vocab_sizes=CRITEO_KAGGLE_VOCABS, deep_mlp=(1024, 1024, 512),
+    n_cross_layers=3, interaction="cross")
+
+ARCH = ArchSpec(arch_id="dcn-v2", family="recsys", config=CONFIG,
+                optimizer=OptimizerConfig(name="adamw", lr=1e-3),
+                source="arXiv:2008.13535; paper")

@@ -1,0 +1,16 @@
+"""deepfm: 39 sparse fields, embed 10, deep MLP 400-400-400, FM
+interaction [arXiv:1703.04247; paper]. 1M-bucket hashed vocab/field."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.recsys import RecsysConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = RecsysConfig(
+    name="deepfm", model="deepfm", n_dense=0, n_sparse=39, embed_dim=10,
+    vocab_sizes=(1_000_000,) * 39, deep_mlp=(400, 400, 400),
+    interaction="fm")
+
+ARCH = ArchSpec(arch_id="deepfm", family="recsys", config=CONFIG,
+                optimizer=OptimizerConfig(name="adamw", lr=1e-3),
+                source="arXiv:1703.04247; paper")

@@ -1,0 +1,17 @@
+"""dien: embed_dim 18, seq_len 100, gru_dim 108, MLP 200-80, AUGRU
+interaction [arXiv:1809.03672; unverified]. Amazon-Books vocab."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.recsys import AMAZON_BOOKS_VOCABS, RecsysConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = RecsysConfig(
+    name="dien", model="dien", n_dense=0, n_sparse=3, embed_dim=18,
+    vocab_sizes=(AMAZON_BOOKS_VOCABS["user"], AMAZON_BOOKS_VOCABS["item"],
+                 AMAZON_BOOKS_VOCABS["cat"]),
+    deep_mlp=(200, 80), seq_len=100, gru_dim=108, interaction="augru")
+
+ARCH = ArchSpec(arch_id="dien", family="recsys", config=CONFIG,
+                optimizer=OptimizerConfig(name="adamw", lr=1e-3),
+                source="arXiv:1809.03672; unverified")

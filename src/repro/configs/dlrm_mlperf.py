@@ -1,0 +1,18 @@
+"""dlrm-mlperf: 13 dense + 26 sparse, embed 128, bottom MLP 13-512-256-128,
+top MLP 1024-1024-512-256-1, dot interaction — MLPerf DLRM benchmark
+config on Criteo 1TB [arXiv:1906.00091; paper]. 187.7M embedding rows."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.recsys import CRITEO_TB_VOCABS, RecsysConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = RecsysConfig(
+    name="dlrm-mlperf", model="dlrm", n_dense=13, n_sparse=26,
+    embed_dim=128, vocab_sizes=CRITEO_TB_VOCABS,
+    bot_mlp=(512, 256, 128), top_mlp=(1024, 1024, 512, 256, 1),
+    interaction="dot")
+
+ARCH = ArchSpec(arch_id="dlrm-mlperf", family="recsys", config=CONFIG,
+                optimizer=OptimizerConfig(name="adagrad", lr=1e-2),
+                source="arXiv:1906.00091; paper")

@@ -1,0 +1,16 @@
+"""gat-cora: 2 layers, 8 hidden x 8 heads, attention aggregator
+[arXiv:1710.10903; paper]. Doubles as the GAT retrieval scorer for
+SkewRoute (DESIGN §5): its edge-attention scores feed the router."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.gnn import GNNConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = GNNConfig(name="gat-cora", n_layers=2, d_hidden=8, n_heads=8,
+                   aggregator="attn", dtype=jnp.float32)
+
+ARCH = ArchSpec(arch_id="gat-cora", family="gnn", config=CONFIG,
+                optimizer=OptimizerConfig(name="adamw", lr=5e-3,
+                                          weight_decay=5e-4),
+                source="arXiv:1710.10903; paper")

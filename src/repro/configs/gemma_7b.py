@@ -1,0 +1,18 @@
+"""gemma-7b: 28L, d_model 3072, 16 heads (kv=16 -> MHA), head_dim 256,
+d_ff 24576, GeGLU, vocab 256000, tied embeddings w/ sqrt(d) scaling
+[arXiv:2403.08295; hf]. Medium / cross-family routing tier."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.layers import LMConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = LMConfig(
+    name="gemma-7b", n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16,
+    head_dim=256, d_ff=24576, vocab=256000, activation="geglu",
+    rope_theta=10000.0, tie_embeddings=True, scale_embed=True,
+    dtype=jnp.bfloat16)
+
+ARCH = ArchSpec(arch_id="gemma-7b", family="lm", config=CONFIG,
+                optimizer=OptimizerConfig(name="adamw", lr=3e-4),
+                source="arXiv:2403.08295; hf")

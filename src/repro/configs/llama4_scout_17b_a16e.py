@@ -1,0 +1,25 @@
+"""llama4-scout-17b-a16e: 48L, d_model 5120, 40 heads (GQA kv=8), expert
+d_ff 8192, vocab 202048, MoE 16 experts top-1 + shared expert
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]. MoE serving tier.
+
+Adafactor: ~109B total params; Adam fp32 m+v would be ~0.9 TB."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.layers import LMConfig, MoEConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = LMConfig(
+    name="llama4-scout-17b-a16e", n_layers=48, d_model=5120, n_heads=40,
+    n_kv_heads=8, head_dim=128, d_ff=8192, vocab=202048,
+    activation="swiglu",
+    moe=MoEConfig(n_experts=16, top_k=1, d_ff=8192, capacity_factor=1.25,
+                  shared_expert=True),
+    rope_theta=500_000.0, tie_embeddings=False, dtype=jnp.bfloat16)
+
+# accum 2: 17.96 GiB/dev at accum=1 on the single-pod mesh (dry-run).
+ARCH = ArchSpec(arch_id="llama4-scout-17b-a16e", family="lm", config=CONFIG,
+                optimizer=OptimizerConfig(name="adafactor", lr=1e-4,
+                                          momentum_dtype=jnp.bfloat16),
+                source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+                accum_steps=2)

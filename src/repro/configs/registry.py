@@ -1,0 +1,30 @@
+"""All assigned architectures, importable by id (``--arch <id>``)."""
+
+from repro.configs import (arctic_480b, dcn_v2, deepfm, dien, dlrm_mlperf,
+                           gat_cora, gemma_7b, internlm2_20b,
+                           llama4_scout_17b_a16e, yi_6b)
+from repro.configs.base import ArchSpec, build_cell  # noqa: F401
+
+ARCHS: dict[str, ArchSpec] = {
+    a.arch_id: a for a in [
+        internlm2_20b.ARCH, yi_6b.ARCH, gemma_7b.ARCH,
+        llama4_scout_17b_a16e.ARCH, arctic_480b.ARCH,
+        gat_cora.ARCH,
+        dien.ARCH, dcn_v2.ARCH, dlrm_mlperf.ARCH, deepfm.ARCH,
+    ]
+}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All 40 (arch, shape) pairs in a stable order."""
+    out = []
+    for arch_id, arch in ARCHS.items():
+        for shape_id in arch.shapes:
+            out.append((arch_id, shape_id))
+    return out

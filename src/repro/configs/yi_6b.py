@@ -1,0 +1,16 @@
+"""yi-6b: 32L, d_model 4096, 32 heads (GQA kv=4), d_ff 11008, vocab 64000
+[arXiv:2403.04652; hf]. llama-arch GQA; small-LM serving tier."""
+
+import jax.numpy as jnp
+from repro.configs.base import ArchSpec
+from repro.models.layers import LMConfig
+from repro.training.optimizer import OptimizerConfig
+
+CONFIG = LMConfig(
+    name="yi-6b", n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+    head_dim=128, d_ff=11008, vocab=64000, activation="swiglu",
+    rope_theta=5_000_000.0, tie_embeddings=False, dtype=jnp.bfloat16)
+
+ARCH = ArchSpec(arch_id="yi-6b", family="lm", config=CONFIG,
+                optimizer=OptimizerConfig(name="adamw", lr=3e-4),
+                source="arXiv:2403.04652; hf")

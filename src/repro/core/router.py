@@ -1,0 +1,108 @@
+"""SkewRoute router: training-free, threshold-based LLM tier selection.
+
+Implements Algorithm 1 of the paper, generalized to N tiers (paper §4.3.1
+shows 3 tiers: Qwen-7b / 14b / 72b). The router consumes the *difficulty
+score* (see ``repro.core.skewness`` — larger = harder) and N-1 ascending
+thresholds; queries land in the lowest tier whose threshold exceeds their
+difficulty.
+
+The router is a frozen dataclass of plain floats — it is deliberately
+trivial to serialize, replicate across serving replicas, and hot-swap when
+the calibrator produces new thresholds (no weights, no training state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import skewness
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Configuration of a training-free skew router.
+
+    Attributes:
+      metric: one of ``area | cumulative | entropy | gini``.
+      thresholds: ascending difficulty thresholds; ``len(thresholds) + 1``
+        tiers. Queries with difficulty <= thresholds[0] go to tier 0 (the
+        smallest model), etc.
+      cumulative_p: the P of the cumulative-threshold metric (paper Fig. 9).
+      top_k: number of retrieved contexts whose scores feed the metric.
+    """
+
+    metric: str = "gini"
+    thresholds: tuple[float, ...] = (0.0,)
+    cumulative_p: float = 0.95
+    top_k: int = 100
+
+    def __post_init__(self):
+        if self.metric not in skewness.METRICS:
+            raise ValueError(f"unknown metric {self.metric!r}; "
+                             f"choose from {sorted(skewness.METRICS)}")
+        if len(self.thresholds) < 1:
+            raise ValueError("need at least one threshold (two tiers)")
+        ts = tuple(float(t) for t in self.thresholds)
+        if any(b < a for a, b in zip(ts, ts[1:])):
+            raise ValueError(f"thresholds must be ascending, got {ts}")
+        object.__setattr__(self, "thresholds", ts)
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.thresholds) + 1
+
+
+def route(scores: jax.Array, config: RouterConfig,
+          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Assign each query to a tier. ``scores``: [..., K] -> tiers [...]."""
+    diff = skewness.difficulty(scores, metric=config.metric,
+                               p=config.cumulative_p, mask=mask)
+    return route_from_difficulty(diff, jnp.asarray(config.thresholds))
+
+
+def route_from_difficulty(difficulty: jax.Array,
+                          thresholds: jax.Array) -> jax.Array:
+    """Bucket difficulty scores by ascending thresholds -> int32 tier ids.
+
+    tier = #thresholds strictly below the difficulty value, i.e.
+    ``difficulty <= t[0]`` -> 0 (smallest model), ``> t[-1]`` -> N-1.
+    """
+    return jnp.sum(difficulty[..., None] > thresholds, axis=-1).astype(jnp.int32)
+
+
+def route_binary(scores: jax.Array, config: RouterConfig,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Paper's two-tier form: True -> large LLM (F_L), False -> small (F_S)."""
+    return route(scores, config, mask) > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingStats:
+    """Aggregate telemetry for a routed batch (exported by the dispatcher)."""
+
+    tier_counts: tuple[int, ...]
+    large_call_ratio: float  # fraction sent to the top tier
+    mean_difficulty: float
+
+    @staticmethod
+    def from_assignments(tiers: jax.Array, n_tiers: int,
+                         difficulty: jax.Array) -> "RoutingStats":
+        counts = tuple(int(jnp.sum(tiers == t)) for t in range(n_tiers))
+        n = max(int(tiers.size), 1)
+        return RoutingStats(
+            tier_counts=counts,
+            large_call_ratio=counts[-1] / n,
+            mean_difficulty=float(jnp.mean(difficulty)),
+        )
+
+
+def expected_tier_shares(difficulty: jax.Array,
+                         thresholds: Sequence[float]) -> list[float]:
+    """Empirical share of traffic per tier for a difficulty sample."""
+    tiers = route_from_difficulty(difficulty, jnp.asarray(tuple(thresholds)))
+    n = max(int(tiers.size), 1)
+    return [float(jnp.sum(tiers == t)) / n for t in range(len(tuple(thresholds)) + 1)]

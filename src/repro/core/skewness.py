@@ -1,0 +1,199 @@
+"""Skewness metrics over retrieved-context score distributions.
+
+This is the mathematical heart of SkewRoute (paper §3.2/§3.3): four metrics
+that quantify how concentrated ("skewed") the score distribution of the
+retrieved top-K knowledge contexts is. High skew <=> simple query.
+
+All metrics are vectorized over a leading batch dimension and jit-safe:
+``scores`` is ``[..., K]`` (descending-sorted is NOT required unless noted;
+we sort internally where the math needs it, and expose ``*_sorted`` variants
+used by the fused Pallas fast path which receives already-sorted top-K
+output from the retrieval stage).
+
+Conventions
+-----------
+* Scores may be arbitrary reals (the SubgraphRAG scorer emits logits); each
+  metric performs the normalization the paper specifies.
+* A ``mask`` of valid entries supports ragged retrieval (fewer than K
+  candidates); masked-out entries contribute nothing.
+* Numerical guards: every normalization adds ``_EPS`` so empty / constant
+  score vectors yield well-defined values (entropy 0, gini 0, area K·0…).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def _apply_mask(scores: jax.Array, mask: Optional[jax.Array], fill: float) -> jax.Array:
+    if mask is None:
+        return scores
+    return jnp.where(mask, scores, fill)
+
+
+def _valid_count(scores: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    if mask is None:
+        return jnp.full(scores.shape[:-1], scores.shape[-1], dtype=scores.dtype)
+    return jnp.sum(mask, axis=-1).astype(scores.dtype)
+
+
+def normalize_minmax(scores: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Min-max normalize to [0, 1] along the last axis (paper §3.2)."""
+    s = _apply_mask(scores, mask, jnp.inf)
+    lo = jnp.min(s, axis=-1, keepdims=True)
+    s = _apply_mask(scores, mask, -jnp.inf)
+    hi = jnp.max(s, axis=-1, keepdims=True)
+    out = (scores - lo) / (hi - lo + _EPS)
+    return _apply_mask(out, mask, 0.0)
+
+
+def normalize_prob(scores: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Normalize scores into a probability distribution (paper §3.3:
+    p_i = s_i / sum_j s_j).
+
+    The paper's scorer emits probabilities in [0,1]; raw logits are made
+    non-negative by shifting with min(min, 0) — positive inputs pass
+    through UNSHIFTED (shifting everything by the min would zero out
+    constant vectors and change the paper's math on its own score range).
+    """
+    neg_min = jnp.minimum(
+        jnp.min(_apply_mask(scores, mask, jnp.inf), axis=-1, keepdims=True), 0.0)
+    shifted = _apply_mask(scores - jax.lax.stop_gradient(neg_min), mask, 0.0)
+    total = jnp.sum(shifted, axis=-1, keepdims=True)
+    return shifted / (total + _EPS)
+
+
+def area_metric(scores: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Area under min-max-normalized scores (paper §3.2).
+
+    Small area  <=> high skew <=> simple query.
+    Range: [0, K]. The paper's Figure-3 examples give 1.07 (power-law) and
+    65.65 (flat) for K=100.
+    """
+    return jnp.sum(normalize_minmax(scores, mask), axis=-1)
+
+
+def cumulative_k(
+    scores: jax.Array,
+    p: float = 0.95,
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Cumulative-threshold metric: smallest k with CDF_k >= p (paper §3.3).
+
+    Scores are sorted descending, normalized to a probability distribution;
+    returns the (1-indexed) count of contexts needed to reach cumulative
+    probability ``p``.  Small k <=> high skew <=> simple query.
+    """
+    probs = normalize_prob(scores, mask)
+    probs = jnp.sort(probs, axis=-1)[..., ::-1]
+    cdf = jnp.cumsum(probs, axis=-1)
+    reached = cdf >= (p - _EPS)
+    # First index where the CDF crosses p; if never (degenerate), K.
+    k = jnp.argmax(reached, axis=-1) + 1
+    any_reached = jnp.any(reached, axis=-1)
+    return jnp.where(any_reached, k, scores.shape[-1]).astype(jnp.float32)
+
+
+def entropy_metric(scores: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Shannon entropy (bits) of the normalized score distribution (§3.3).
+
+    Low entropy <=> high skew <=> simple query. Range [0, log2 K].
+    """
+    probs = normalize_prob(scores, mask)
+    plogp = jnp.where(probs > _EPS, probs * jnp.log2(probs + _EPS), 0.0)
+    return -jnp.sum(plogp, axis=-1)
+
+
+def gini_metric(scores: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Gini coefficient of the score distribution (paper §3.3).
+
+    Uses the paper's formula over ascending-sorted scores s'_1<=...<=s'_K:
+
+        G = (K + 1 - 2 * sum_i (K - i + 1) s'_i / sum_j s'_j) / K
+
+    High Gini <=> high skew <=> simple query. Range [0, 1 - 1/K].
+    Scores are shifted to be non-negative first (Gini is defined for
+    non-negative quantities). Masked entries are treated as absent by
+    computing over the shifted values with zero fill — for a correct ragged
+    Gini we renormalize using the valid count.
+    """
+    kk = scores.shape[-1]
+    neg_min = jnp.minimum(
+        jnp.min(_apply_mask(scores, mask, jnp.inf), axis=-1, keepdims=True), 0.0)
+    shifted = _apply_mask(scores - neg_min, mask, 0.0)
+    asc = jnp.sort(shifted, axis=-1)
+    n_valid = _valid_count(scores, mask)
+    # Ranks: with zero-fill the invalid entries sort to the front and carry 0
+    # weight; valid entries occupy the LAST n_valid slots. Rank within valid
+    # entries (ascending, 1-indexed) is i - (K - n_valid).
+    idx = jnp.arange(1, kk + 1, dtype=scores.dtype)
+    rank_in_valid = idx - (kk - n_valid)[..., None]
+    rank_in_valid = jnp.maximum(rank_in_valid, 0.0)
+    weight = n_valid[..., None] - rank_in_valid + 1.0  # (K - i + 1) over valid
+    weight = jnp.where(rank_in_valid > 0, weight, 0.0)
+    total = jnp.sum(asc, axis=-1)
+    weighted = jnp.sum(weight * asc, axis=-1)
+    g = (n_valid + 1.0 - 2.0 * weighted / (total + _EPS)) / jnp.maximum(n_valid, 1.0)
+    return jnp.clip(g, 0.0, 1.0)
+
+
+# --- registry ---------------------------------------------------------------
+
+#: Direction convention: for every metric we expose a *difficulty score*
+#: where LARGER means MORE DIFFICULT (lower skew), so a single thresholding
+#: rule `difficulty > theta -> large LLM` serves all metrics.
+#: area: larger = flatter = harder (already aligned).
+#: cumulative_k: larger = harder (aligned).
+#: entropy: larger = harder (aligned).
+#: gini: larger = MORE skewed = EASIER -> negate.
+
+def difficulty_area(scores, mask=None):
+    return area_metric(scores, mask)
+
+
+def difficulty_cumulative(scores, p: float = 0.95, mask=None):
+    return cumulative_k(scores, p, mask)
+
+
+def difficulty_entropy(scores, mask=None):
+    return entropy_metric(scores, mask)
+
+
+def difficulty_gini(scores, mask=None):
+    return -gini_metric(scores, mask)
+
+
+METRICS = {
+    "area": difficulty_area,
+    "cumulative": difficulty_cumulative,
+    "entropy": difficulty_entropy,
+    "gini": difficulty_gini,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "p"))
+def difficulty(scores: jax.Array, metric: str = "gini", p: float = 0.95,
+               mask: Optional[jax.Array] = None) -> jax.Array:
+    """Compute the difficulty score for a batch of score vectors ``[..., K]``."""
+    if metric == "cumulative":
+        return METRICS[metric](scores, p, mask)
+    return METRICS[metric](scores, mask)
+
+
+def all_metrics(scores: jax.Array, p: float = 0.95,
+                mask: Optional[jax.Array] = None) -> dict[str, jax.Array]:
+    """All four difficulty metrics in one call (shared normalization work
+    is left to XLA CSE; the fused single-pass version lives in
+    ``repro.kernels.skew_metrics``)."""
+    return {
+        "area": difficulty_area(scores, mask),
+        "cumulative": difficulty_cumulative(scores, p, mask),
+        "entropy": difficulty_entropy(scores, mask),
+        "gini": difficulty_gini(scores, mask),
+    }

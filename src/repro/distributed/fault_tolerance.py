@@ -1,0 +1,126 @@
+"""Fault tolerance: failure detection, checkpoint/restart, elastic remesh.
+
+The coordinator pattern used at multi-pod scale, runnable in-process for
+tests (failures injected via `inject_failure`):
+
+* **Heartbeats**: every worker (host) reports each step; a worker silent
+  for ``timeout_steps`` is declared dead.
+* **Recovery plan**: on failure the coordinator picks the restart point
+  (latest committed checkpoint — commits are atomic, see
+  training/checkpoint.py), the surviving worker set, and an **elastic
+  mesh**: the data axis shrinks to the largest divisor-of-batch size the
+  survivors support; the model axis never shrinks (TP state is not
+  re-shardable without weights movement, so losing a model-column peer
+  means waiting for a replacement — this matches production practice).
+* **Straggler mitigation** (training): synchronous-with-backup — workers
+  whose step latency exceeds ``straggler_factor`` x median get flagged;
+  the plan reassigns their data shard to a hot spare. (Serving-side
+  mitigation lives in serving/scheduler.py as deadline re-dispatch.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class WorkerState:
+    worker_id: int
+    last_step: int = -1
+    last_beat: float = 0.0
+    step_latency: float = 0.0
+    alive: bool = True
+    is_spare: bool = False
+
+
+@dataclasses.dataclass
+class RecoveryPlan:
+    restart_step: int
+    survivors: list[int]
+    new_data_parallel: int
+    reassigned_shards: dict[int, int]   # failed worker -> replacement
+    notes: str = ""
+
+
+class FaultToleranceManager:
+    def __init__(self, n_workers: int, data_parallel: int, model_parallel: int,
+                 timeout_steps: int = 3, straggler_factor: float = 2.0,
+                 n_spares: int = 0):
+        self.workers = {i: WorkerState(i) for i in range(n_workers + n_spares)}
+        for i in range(n_workers, n_workers + n_spares):
+            self.workers[i].is_spare = True
+        self.n_active = n_workers
+        self.dp = data_parallel
+        self.mp = model_parallel
+        self.timeout_steps = timeout_steps
+        self.straggler_factor = straggler_factor
+        self.global_step = 0
+
+    # -- heartbeat ingestion --------------------------------------------------
+
+    def heartbeat(self, worker_id: int, step: int,
+                  latency_s: float = 0.0, now: Optional[float] = None) -> None:
+        w = self.workers[worker_id]
+        w.last_step = step
+        w.last_beat = time.monotonic() if now is None else now
+        w.step_latency = latency_s
+        self.global_step = max(self.global_step, step)
+
+    def inject_failure(self, worker_id: int) -> None:
+        self.workers[worker_id].alive = False
+
+    # -- detection -------------------------------------------------------------
+
+    def dead_workers(self) -> list[int]:
+        return [w.worker_id for w in self.workers.values()
+                if not w.is_spare and (
+                    not w.alive
+                    or self.global_step - w.last_step > self.timeout_steps)]
+
+    def stragglers(self) -> list[int]:
+        lats = [w.step_latency for w in self.workers.values()
+                if w.alive and not w.is_spare and w.step_latency > 0]
+        if len(lats) < 2:
+            return []
+        med = float(np.median(lats))
+        return [w.worker_id for w in self.workers.values()
+                if w.alive and not w.is_spare
+                and w.step_latency > self.straggler_factor * med]
+
+    # -- recovery --------------------------------------------------------------
+
+    def make_recovery_plan(self, latest_checkpoint_step: int) -> RecoveryPlan:
+        dead = set(self.dead_workers())
+        spares = [w.worker_id for w in self.workers.values()
+                  if w.is_spare and w.alive]
+        reassigned = {}
+        for d in sorted(dead):
+            if spares:
+                s = spares.pop(0)
+                reassigned[d] = s
+                self.workers[s].is_spare = False
+        still_dead = dead - set(reassigned)
+        survivors = [w.worker_id for w in self.workers.values()
+                     if w.alive and not w.is_spare
+                     and w.worker_id not in still_dead]
+        # data axis shrinks by whole model-columns: each lost worker kills
+        # its model-parallel column for training purposes
+        lost_columns = -(-len(still_dead) // self.mp) if still_dead else 0
+        new_dp = self.dp - lost_columns
+        notes = (f"{len(dead)} failures, {len(reassigned)} absorbed by "
+                 f"spares, dp {self.dp}->{new_dp}")
+        return RecoveryPlan(restart_step=latest_checkpoint_step,
+                            survivors=survivors, new_data_parallel=new_dp,
+                            reassigned_shards=reassigned, notes=notes)
+
+    def elastic_batch_plan(self, global_batch: int, new_dp: int) -> dict:
+        """Keep the global batch by rebalancing per-shard batch (divisor-
+        aware); callers rebuild the mesh + data shards from this."""
+        per = global_batch // max(new_dp, 1)
+        return {"data_parallel": new_dp, "per_shard_batch": per,
+                "global_batch": per * new_dp,
+                "dropped": global_batch - per * new_dp}

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical hot spots (DESIGN §6).
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper with an interpret/XLA fallback) and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,104 @@
+"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+
+The cost SkewRoute tries to avoid paying on the big tier is dominated by
+exactly this op (decode_32k / long_500k shapes): a [B, H, Dh] query
+attending to a [B, KV, S, Dh] cache. Tiling: grid (B, KV, S/bk) with the
+cache dimension sequential; online-softmax state for the whole q-head
+GROUP of a kv head ([G, Dh] accumulator) lives in VMEM scratch — GQA means
+one cache block load serves G query heads (arithmetic intensity x G).
+
+The valid cache length arrives as a scalar in SMEM; blocks past it are
+skipped entirely (``pl.when``), so a 500k-slot cache at position 10k reads
+only ceil(10k/bk) blocks — the split-KV analogue of FlashDecoding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 256
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    kv_len = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ik * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, dh]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, bk]
+        key_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(key_pos < kv_len, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B, H, Dh]; k/v: [B, KV, S, Dh]; kv_len: scalar int32.
+
+    Returns [B, H, Dh] — attention of the single new token over cache
+    positions < kv_len.
+    """
+    b, h, dh = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    if s % block_k:
+        raise ValueError(f"cache len {s} not divisible by block {block_k}")
+    qg = q.reshape(b, kv, g, dh)
+    grid = (b, kv, s // block_k)
+    kernel = functools.partial(_decode_kernel, scale=dh ** -0.5,
+                               block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda bb, hh, ik: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda bb, hh, ik: (bb, hh, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda bb, hh, ik: (bb, hh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bb, hh, ik: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1), qg, k, v)
+    return out.reshape(b, h, dh)

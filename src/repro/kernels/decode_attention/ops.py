@@ -1,0 +1,18 @@
+"""Public wrapper for flash-decode (TPU native / interpret elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import kernel, ref
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array,
+                     block_k: int = kernel.DEFAULT_BLOCK_K) -> jax.Array:
+    on_tpu = jax.default_backend() == "tpu"
+    return kernel.decode_attention(q, k, v, kv_len, block_k=block_k,
+                                   interpret=not on_tpu)
+
+
+decode_ref = ref.decode_ref

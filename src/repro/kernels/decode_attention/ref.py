@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+               kv_len: jax.Array) -> jax.Array:
+    """q: [B, H, Dh]; k/v: [B, KV, S, Dh] -> [B, H, Dh]."""
+    b, h, dh = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * dh ** -0.5
+    mask = jnp.arange(s)[None, None, :] < kv_len
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

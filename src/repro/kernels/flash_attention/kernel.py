@@ -1,0 +1,118 @@
+"""Causal GQA flash-attention Pallas kernel (prefill path).
+
+Tiling: grid (B, H, Sq/bq, Sk/bk); the last (KV) dimension is sequential
+("arbitrary" semantics on TPU), so the online-softmax state (m, l, acc)
+lives in VMEM scratch and persists across KV steps for a fixed (b, h, iq).
+Blocks are MXU-aligned (bq = bk = 128 by default, head_dim a lane
+multiple). K/V BlockSpecs index the kv head as ``h // group`` — no
+materialized head repeat, unlike the XLA fallback (`repro.models.flash`).
+
+Causal masking: KV blocks entirely above the diagonal are skipped via
+``pl.when``; the diagonal block masks with a broadcasted-iota comparison.
+
+VMEM budget per step (bq=bk=128, dh=128, fp32 scratch):
+  q 64 KiB + k/v 64 KiB ea + acc 64 KiB + p 64 KiB + m/l 1 KiB < 0.5 MiB,
+comfortably inside the ~16 MiB/core budget, leaving room for the compiler
+to double-buffer the HBM->VMEM streams.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # Causal: query i sees keys <= i. Skip blocks fully above the diagonal.
+    diag_possible = k_start <= q_start + block_q - 1
+
+    @pl.when(diag_possible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])                    # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)                # [bk, dh]
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, H, Sq, Dh]; k/v: [B, KV, Sk, Dh] -> out [B, H, Sq, Dh].
+
+    Causal; requires Sq == Sk (prefill) and block-divisible seq lens.
+    """
+    b, h, sq, dh = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    group = h // kv
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq lens ({sq},{sk}) not divisible by blocks "
+                         f"({block_q},{block_k})")
+    if sq != sk:
+        raise NotImplementedError("prefill kernel expects Sq == Sk; decode "
+                                  "uses repro.kernels.decode_attention")
+    grid = (b, h, sq // block_q, sk // block_k)
+    kernel = functools.partial(_flash_kernel, scale=dh ** -0.5,
+                               block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

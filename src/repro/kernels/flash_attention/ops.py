@@ -1,0 +1,25 @@
+"""Public wrapper: Pallas flash attention with XLA fallback.
+
+On TPU the Pallas kernel runs natively; elsewhere (CPU tests, dry-run
+host devices) `interpret=True` executes the same kernel body through the
+Pallas interpreter, and `repro.models.flash.flash_attention` provides the
+production XLA fallback used by the sharded model code.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    block_q: int = kernel.DEFAULT_BLOCK_Q,
+                    block_k: int = kernel.DEFAULT_BLOCK_K) -> jax.Array:
+    """[B,H,Sq,Dh] x [B,KV,Sk,Dh]^2 -> [B,H,Sq,Dh] (causal, Sq == Sk)."""
+    on_tpu = jax.default_backend() == "tpu"
+    return kernel.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                                  interpret=not on_tpu)
+
+
+attention_ref = ref.attention_ref

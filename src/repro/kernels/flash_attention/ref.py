@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """q: [B, H, Sq, Dh]; k/v: [B, KV, Sk, Dh] -> [B, H, Sq, Dh]; causal."""
+    b, h, sq, dh = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)
+    mask = jnp.arange(sk)[None, :] <= q_pos
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

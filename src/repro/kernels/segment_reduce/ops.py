@@ -1,0 +1,33 @@
+"""Public wrapper: embedding-bag style sorted segment sum."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.segment_reduce import kernel, ref
+
+
+def segment_sum_sorted(rows, seg_ids, n_segments, rows_per_seg,
+                       seg_tile: int = 8):
+    on_tpu = jax.default_backend() == "tpu"
+    return kernel.segment_sum_sorted(rows, seg_ids, n_segments,
+                                     rows_per_seg, seg_tile=seg_tile,
+                                     interpret=not on_tpu)
+
+
+def embedding_bag_fused(table, ids, n_bags, combiner: str = "sum"):
+    """EmbeddingBag with the Pallas reduce: ids [B, nnz] (-1 pad) ->
+    [B, dim]. Gather stays on XLA's native path; the reduce is the kernel."""
+    import jax.numpy as jnp
+    b, nnz = ids.shape
+    rows = jnp.take(table, jnp.maximum(ids.reshape(-1), 0), axis=0)
+    rows = jnp.where(ids.reshape(-1, 1) >= 0, rows, 0)
+    seg = jnp.repeat(jnp.arange(b), nnz)
+    out = segment_sum_sorted(rows, seg, b, nnz)
+    if combiner == "mean":
+        counts = jnp.maximum(jnp.sum(ids >= 0, axis=1, keepdims=True), 1)
+        out = out / counts.astype(out.dtype)
+    return out
+
+
+segment_sum_sorted_ref = ref.segment_sum_sorted_ref

@@ -1,0 +1,12 @@
+"""Oracle: jax.ops.segment_sum over the same layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_sorted_ref(rows, seg_ids, n_segments, rows_per_seg=None):
+    safe = jnp.where(seg_ids >= 0, seg_ids, n_segments)
+    out = jax.ops.segment_sum(rows, safe, num_segments=n_segments + 1)
+    return out[:n_segments]

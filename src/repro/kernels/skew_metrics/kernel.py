@@ -1,0 +1,87 @@
+"""Fused skewness-metric Pallas kernel — the SkewRoute router fast path.
+
+Every request pays this op (paper Algorithm 1): given the top-K retrieval
+scores (descending-sorted, as emitted by top-k), compute all four
+difficulty metrics in ONE pass over a [rows, K] tile:
+
+  col 0  area          sum(minmax-normalized)
+  col 1  cumulative-k  #contexts to reach CDF >= P
+  col 2  entropy       -sum p log2 p
+  col 3  gini          (K+1 - 2 sum (K-i+1) s'_i / sum) / K
+
+The descending order is exploited twice: the CDF needs no sort, and the
+ascending-rank weights for Gini are just reversed descending ranks —
+`repro.core.skewness` (the XLA oracle) sorts twice instead.
+
+Grid: row tiles; one [rows_tile, K] VMEM block, four VPU reductions, one
+[rows_tile, 4] store. K=100 pads to 128 lanes with -inf-aware masking.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 8
+_EPS = 1e-12
+
+
+def _skew_kernel(s_ref, o_ref, *, k_valid: int, p_cdf: float):
+    s = s_ref[...].astype(jnp.float32)                     # [rows, Kpad]
+    rows, kpad = s.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, kpad), 1)
+    valid = col < k_valid
+
+    # min-max normalize (masked)
+    s_hi = jnp.max(jnp.where(valid, s, -jnp.inf), axis=1, keepdims=True)
+    s_lo = jnp.min(jnp.where(valid, s, jnp.inf), axis=1, keepdims=True)
+    norm = jnp.where(valid, (s - s_lo) / (s_hi - s_lo + _EPS), 0.0)
+    area = jnp.sum(norm, axis=1)
+
+    # probability normalization (shift only if negatives, like the oracle)
+    shifted = jnp.where(valid, s - jnp.minimum(s_lo, 0.0), 0.0)
+    total = jnp.sum(shifted, axis=1, keepdims=True)
+    prob = shifted / (total + _EPS)
+
+    # cumulative-k: scores arrive descending, so CDF = running sum
+    cdf = jnp.cumsum(prob, axis=1)
+    below = jnp.where(valid, (cdf < p_cdf - _EPS).astype(jnp.float32), 0.0)
+    cum_k = jnp.minimum(jnp.sum(below, axis=1) + 1.0, float(k_valid))
+
+    # entropy (bits)
+    plogp = jnp.where(prob > _EPS, prob * (jnp.log(prob + _EPS) / jnp.log(2.0)),
+                      0.0)
+    entropy = -jnp.sum(plogp, axis=1)
+
+    # gini: ascending rank of column j (descending data) = k_valid - j
+    asc_rank = (k_valid - col).astype(jnp.float32)         # 1-indexed
+    weight = jnp.where(valid, k_valid - asc_rank + 1.0, 0.0)
+    weighted = jnp.sum(weight * shifted, axis=1)
+    tot = total[:, 0]
+    gini = (k_valid + 1.0 - 2.0 * weighted / (tot + _EPS)) / k_valid
+    gini = jnp.clip(gini, 0.0, 1.0)
+
+    o_ref[...] = jnp.stack([area, cum_k, entropy, gini], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("p_cdf", "row_tile", "interpret"))
+def skew_metrics(scores_desc: jax.Array, p_cdf: float = 0.95,
+                 row_tile: int = DEFAULT_ROW_TILE,
+                 interpret: bool = False) -> jax.Array:
+    """scores_desc: [B, K] descending-sorted -> [B, 4] (area, k@P, H, gini)."""
+    b, k = scores_desc.shape
+    kpad = -(-k // 128) * 128
+    bpad = -(-b // row_tile) * row_tile
+    s = jnp.pad(scores_desc, ((0, bpad - b), (0, kpad - k)))
+    out = pl.pallas_call(
+        functools.partial(_skew_kernel, k_valid=k, p_cdf=p_cdf),
+        grid=(bpad // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, kpad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_tile, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bpad, 4), jnp.float32),
+        interpret=interpret,
+    )(s)
+    return out[:b]

@@ -1,0 +1,18 @@
+"""Public wrapper for the fused skew-metrics kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.skew_metrics import kernel, ref
+
+METRIC_COLUMNS = ("area", "cumulative", "entropy", "gini")
+
+
+def skew_metrics(scores_desc, p_cdf: float = 0.95):
+    on_tpu = jax.default_backend() == "tpu"
+    return kernel.skew_metrics(scores_desc, p_cdf=p_cdf,
+                               interpret=not on_tpu)
+
+
+skew_metrics_ref = ref.skew_metrics_ref

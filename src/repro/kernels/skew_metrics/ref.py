@@ -1,0 +1,17 @@
+"""Oracle: the four metrics from repro.core.skewness, stacked."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import skewness
+
+
+def skew_metrics_ref(scores_desc, p_cdf: float = 0.95):
+    """[B, K] descending-sorted -> [B, 4] (area, cum_k, entropy, gini)."""
+    return jnp.stack([
+        skewness.area_metric(scores_desc),
+        skewness.cumulative_k(scores_desc, p_cdf),
+        skewness.entropy_metric(scores_desc),
+        skewness.gini_metric(scores_desc),
+    ], axis=1)

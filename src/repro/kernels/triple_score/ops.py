@@ -1,0 +1,17 @@
+"""Public wrapper for the fused triple scorer."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.triple_score import kernel, ref
+
+
+def triple_score(triple_feats, query_emb, w1_t, w1_q, b1, w2, b2,
+                 tile: int = kernel.DEFAULT_TILE):
+    on_tpu = jax.default_backend() == "tpu"
+    return kernel.triple_score(triple_feats, query_emb, w1_t, w1_q, b1,
+                               w2, b2, tile=tile, interpret=not on_tpu)
+
+
+triple_score_ref = ref.triple_score_ref

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused triple scorer."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def triple_score_ref(triple_feats, query_emb, w1_t, w1_q, b1, w2, b2):
+    """[N,Dt] x [Q,Dq] -> [Q,N] 2-layer-MLP relevance scores."""
+    t32 = triple_feats.astype(jnp.float32)
+    q32 = query_emb.astype(jnp.float32)
+    h = (t32 @ w1_t.astype(jnp.float32))[None, :, :] \
+        + (q32 @ w1_q.astype(jnp.float32) + b1)[:, None, :]
+    h = jax.nn.relu(h)
+    return (h @ w2.astype(jnp.float32))[..., 0] + b2[0]

@@ -1,0 +1,265 @@
+import os
+# 512 placeholder devices for the production meshes; WLICM disabled because
+# XLA hoists bf16->f32 converts of remat-saved activation stacks out of the
+# backward loop, materializing a full-precision copy of every saved
+# residual (dry-run finding; +13 GiB/device on arctic-480b train_4k).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+
+Per cell this records (to JSON):
+  * compile success + wall time
+  * ``memory_analysis()``  — per-device bytes (args/output/temp/code)
+  * ``cost_analysis()``    — per-device HLO FLOPs / bytes accessed
+  * collective traffic     — parsed from the post-SPMD HLO text, operand
+                             bytes summed per collective kind
+  * roofline terms (seconds) + dominant bottleneck (launch/roofline.py)
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs 1]
+  python -m repro.launch.dryrun --all --subprocess   # crash isolation
+
+Results append to benchmarks/dryrun_results/<arch>__<shape>__<mesh>.json;
+`benchmarks/roofline_report.py` renders the EXPERIMENTS.md tables.
+"""
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.launch import hlo_analysis, hlo_cost, mesh as mesh_lib
+from repro.launch.roofline import roofline_terms
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "dryrun_results"
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str,
+             overrides: dict | None = None, probe: bool = False) -> dict:
+    """Lower + compile one cell on one mesh; return the record dict."""
+    from jax.sharding import NamedSharding
+    from repro.configs.registry import get_arch, build_cell
+    from repro.distributed import sharding as shd
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: dict = {"arch": arch_id, "shape": shape_id, "mesh": mesh_kind,
+                 "mesh_shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
+                 "n_devices": mesh.devices.size}
+    rules = (shd.TRAIN_RULES if shape_id.startswith(("train", "full_graph",
+                                                     "minibatch", "ogb",
+                                                     "molecule"))
+             else shd.DEFAULT_RULES)
+    t0 = time.monotonic()
+    try:
+        with shd.use_mesh(mesh, rules):
+            arch = get_arch(arch_id)
+            if overrides:
+                import dataclasses
+                arch = dataclasses.replace(
+                    arch, config=dataclasses.replace(arch.config, **overrides))
+            cell = build_cell(arch, shape_id)
+            to_ns = lambda spec: NamedSharding(mesh, spec)
+            in_shardings = jax.tree.map(
+                to_ns, cell.in_specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            jitted = jax.jit(cell.fn, in_shardings=in_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.monotonic()
+            compiled = lowered.compile()
+            t_compile = time.monotonic()
+
+        rec["ok"] = True
+        rec["lower_s"] = round(t_lower - t0, 2)
+        rec["compile_s"] = round(t_compile - t_lower, 2)
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_device_bytes": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+            }
+        if os.environ.get("DRYRUN_VERBOSE") == "1":
+            print(compiled.memory_analysis())   # proves it fits
+            print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+                   if not k.endswith("}")})     # FLOPs/bytes for §Roofline
+        ca = compiled.cost_analysis() or {}
+        # XLA's numbers count while-loop bodies once — kept for reference.
+        rec["cost_xla_raw"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+        hlo = compiled.as_text()
+        # Loop-aware re-derivation (launch/hlo_cost.py) is the roofline input.
+        lc = hlo_cost.analyze(hlo)
+        rec["cost"] = {"flops": lc["flops"],
+                       "bytes_accessed": lc["bytes_accessed"],
+                       "transcendentals": float(ca.get("transcendentals", 0.0))}
+        rec["collectives"] = {
+            "counts": lc["collective_counts"],
+            "bytes": lc["collective_bytes"],
+            "total_bytes": lc["collective_total_bytes"],
+            "n_ops": lc["collective_n_ops"],
+        }
+        rec["meta"] = {k: float(v) for k, v in cell.meta.items()}
+        if not probe:
+            rec["roofline"] = roofline_terms(rec)
+            if os.environ.get("DRYRUN_PROBES") == "1":
+                probe_crosscheck(rec, arch_id, shape_id, mesh_kind)
+    except Exception as e:  # noqa: BLE001 — record, don't die
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        rec["compile_s"] = round(time.monotonic() - t0, 2)
+    return rec
+
+
+def _probe_costs(arch_id: str, shape_id: str, mesh_kind: str,
+                 overrides: dict) -> dict | None:
+    """Compile a small unrolled probe and return its per-device costs.
+
+    cost_analysis() counts a while-loop body ONCE regardless of trip count,
+    so scan-over-layers models undercount FLOPs ~L-fold. Probes rebuild the
+    cell with n layers unrolled inside a trip-1 loop (scan(unroll=n)) so
+    every layer is counted; linear extrapolation recovers the full model.
+    """
+    rec = run_cell(arch_id, shape_id, mesh_kind, overrides=overrides,
+                   probe=True)
+    if not rec.get("ok"):
+        return None
+    return {"flops": rec["cost_xla_raw"]["flops"]}
+
+
+def probe_crosscheck(rec: dict, arch_id: str, shape_id: str,
+                     mesh_kind: str) -> None:
+    """Optional validation: compare hlo_cost FLOPs with probe-linearized.
+
+    LM: C(L) = C(1) + (L-1)·(C(2)-C(1)) with layers unrolled and the flash
+    KV-block scan collapsed to a single block (identical FLOPs — every
+    (q,k) pair is computed exactly once either way).
+    DIEN: same linearization over GRU seq_len.
+    Other families have no data-dependent loops; costs are already exact.
+    """
+    from repro.configs.registry import get_arch
+
+    arch = get_arch(arch_id)
+    sh = arch.shapes[shape_id]
+    if arch.family == "lm":
+        seq = sh["seq_len"]
+        base = dict(scan_unroll=1, flash_block=seq, loss_chunk=seq)
+        c1 = _probe_costs(arch_id, shape_id, mesh_kind, {**base, "n_layers": 1})
+        c2 = _probe_costs(arch_id, shape_id, mesh_kind,
+                          {**base, "n_layers": 2, "scan_unroll": 2})
+        n_steps = arch.config.n_layers
+    elif arch.family == "recsys" and arch.config.model == "dien":
+        c1 = _probe_costs(arch_id, shape_id, mesh_kind,
+                          {"seq_len": 1, "scan_unroll": 1})
+        c2 = _probe_costs(arch_id, shape_id, mesh_kind,
+                          {"seq_len": 2, "scan_unroll": 2})
+        n_steps = arch.config.seq_len
+    else:
+        return
+    if c1 is None or c2 is None:
+        rec["probe_crosscheck"] = {"error": "probe compile failed"}
+        return
+    lin_flops = c1["flops"] + (n_steps - 1) * max(c2["flops"] - c1["flops"], 0.0)
+    rec["probe_crosscheck"] = {
+        "probe_linearized_flops": lin_flops,
+        "hlo_cost_flops": rec["cost"]["flops"],
+        "agreement": (rec["cost"]["flops"] / lin_flops) if lin_flops else None,
+        "n_steps": n_steps,
+    }
+
+
+def save(rec: dict) -> pathlib.Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return path
+
+
+def _summary(rec: dict) -> str:
+    if not rec["ok"]:
+        return f"FAIL {rec['arch']}/{rec['shape']}/{rec['mesh']}: {rec['error']}"
+    r = rec.get("roofline", {})
+    mem = rec.get("memory", {}).get("peak_device_bytes", 0) / 2**30
+    return (f"ok   {rec['arch']}/{rec['shape']}/{rec['mesh']}: "
+            f"compile {rec['compile_s']}s  peak {mem:.2f} GiB/dev  "
+            f"bound={r.get('dominant', '?')}  "
+            f"t_comp={r.get('compute_s', 0):.2e}s t_mem={r.get('memory_s', 0):.2e}s "
+            f"t_coll={r.get('collective_s', 0):.2e}s")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="one subprocess per cell (crash isolation)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        from repro.configs.registry import all_cells
+        cells = all_cells()
+    else:
+        if not (args.arch and args.shape):
+            ap.error("need --arch and --shape (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch_id, shape_id in cells:
+        for mesh_kind in meshes:
+            out = RESULTS_DIR / f"{arch_id}__{shape_id}__{mesh_kind}.json"
+            if args.skip_existing and out.exists():
+                rec = json.loads(out.read_text())
+                if rec.get("ok"):
+                    print(f"skip {arch_id}/{shape_id}/{mesh_kind} (done)")
+                    continue
+            if not args.all:
+                # single-cell mode: print the raw analyses (spec: the
+                # dry-run must print memory_analysis / cost_analysis)
+                os.environ["DRYRUN_VERBOSE"] = "1"
+            if args.subprocess:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch_id, "--shape", shape_id,
+                       "--mesh", mesh_kind]
+                proc = subprocess.run(cmd, capture_output=True, text=True,
+                                      env={**os.environ,
+                                           "PYTHONPATH": os.environ.get("PYTHONPATH", "src")})
+                if proc.returncode != 0 and not out.exists():
+                    rec = {"arch": arch_id, "shape": shape_id,
+                           "mesh": mesh_kind, "ok": False,
+                           "error": f"subprocess rc={proc.returncode}",
+                           "traceback": proc.stderr[-4000:]}
+                    save(rec)
+                rec = json.loads(out.read_text()) if out.exists() else rec
+            else:
+                rec = run_cell(arch_id, shape_id, mesh_kind)
+                save(rec)
+            print(_summary(rec), flush=True)
+            failures += 0 if rec.get("ok") else 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+`compiled.cost_analysis()` has no collective-bytes entry, so the roofline's
+third term comes from scanning the optimized HLO for all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops and
+summing their operand sizes (per-device shard bytes, matching the
+per-device FLOPs/bytes from cost_analysis).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g. ``f32[16,128]{1,0}`` or ``bf16[4096]`` (layout braces optional)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# ``%name = <shape or tuple> <op>(`` — op token just before the paren
+_OP_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|\S+)\s+([a-z\-]+)(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _operand_bytes(line: str) -> int:
+    """Sum shape sizes appearing in the operand list of the op call."""
+    lparen = line.index("(")
+    operands = line[lparen:]
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(operands))
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-kind collective op counts + operand bytes (per device)."""
+    counts: dict[str, int] = defaultdict(int)
+    bytes_: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "(" not in line or "=" not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # normalize -start/-done fusions; count traffic once (at -start or
+        # the plain op; -done carries the same operands, skip it)
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        counts[base] += 1
+        bytes_[base] += _operand_bytes(line)
+    total = sum(bytes_.values())
+    return {
+        "counts": dict(counts),
+        "bytes": dict(bytes_),
+        "total_bytes": total,
+        "n_ops": sum(counts.values()),
+    }
+
+
+def hbm_traffic_upper_bound(hlo_text: str) -> int:
+    """Sum of output-buffer sizes of all non-fusion root ops — a crude
+    upper bound on HBM traffic used for sanity checks only (cost_analysis
+    'bytes accessed' is the number the roofline uses)."""
+    total = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped.startswith("%") or "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1].lstrip()
+        m = _SHAPE_RE.match(rhs)
+        if m:
+            total += _shape_bytes(m.group(1), m.group(2))
+    return total

@@ -1,0 +1,132 @@
+"""Attribution tool for hillclimbing: rank loop-aware byte / collective
+contributions per op, grouped by the jaxpr op_name metadata, so the
+dominant roofline term can be traced to a specific model component.
+
+  PYTHONPATH=src python -m repro.launch.hlo_breakdown --arch X --shape Y \\
+      [--mesh single] [--top 15] [--collectives]
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.launch import hlo_cost
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _tag(line: str) -> str:
+    m = _OPNAME_RE.search(line)
+    if not m:
+        return "(no metadata)"
+    name = m.group(1)
+    # keep the trailing ~3 semantic segments; drop jit/transpose wrappers
+    parts = [p for p in name.split("/")
+             if p and not p.startswith(("jit(", "jvp(", "transpose("))]
+    return "/".join(parts[-3:]) if parts else name[:60]
+
+
+def breakdown(hlo: str, top: int = 15, collectives_only: bool = False):
+    comps, entry = hlo_cost._parse(hlo)
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order, seen = [entry], {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        for body, cond in comp.while_bodies:
+            trips = hlo_cost._trip_count(comps, cond)
+            for sub, mul in ((body, m * trips), (cond, m * (trips + 1))):
+                if sub:
+                    mult[sub] += mul
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+        for callee, kind in comp.calls:
+            if kind in hlo_cost._BOUNDARY_CALL_KINDS:
+                continue
+            mult[callee] += m
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+    fusion_targets = {c for comp in comps.values()
+                      for c, kind in comp.calls
+                      if kind in hlo_cost._BOUNDARY_CALL_KINDS}
+    rows = defaultdict(float)
+    for name, comp in comps.items():
+        if name in fusion_targets or mult.get(name, 0) == 0:
+            continue
+        m = mult[name]
+        for op in comp.ops:
+            if op.kind in hlo_cost._SKIP_OPS or op.kind.endswith("-done"):
+                continue
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            is_coll = base in hlo_cost._COLLECTIVES
+            if collectives_only and not is_coll:
+                continue
+            out_b = hlo_cost._sig_bytes(op.out_sig)
+            if base in ("dynamic-slice", "slice", "gather"):
+                opd = out_b
+            elif base == "dynamic-update-slice":
+                u = op.operand_vars[1] if len(op.operand_vars) > 1 else None
+                opd = hlo_cost._sig_bytes(comp.symbols.get(u, ""))
+                out_b = opd
+            elif base == "fusion":
+                opd, out_b = hlo_cost._fusion_bytes(comps, comp, op)
+            else:
+                opd = sum(hlo_cost._sig_bytes(comp.symbols.get(v, ""))
+                          for v in op.operand_vars)
+            rows[(base, _tag(op.line))] += m * (out_b + opd)
+    ranked = sorted(rows.items(), key=lambda kv: -kv[1])[:top]
+    total = sum(rows.values())
+    return ranked, total
+
+
+def main() -> None:
+    import argparse
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        "--xla_force_host_platform_device_count=512 "
+        "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--collectives", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    from jax.sharding import NamedSharding
+    from repro.configs.registry import build_cell, get_arch
+    from repro.distributed import sharding as shd
+    from repro.launch import mesh as mesh_lib
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(args.mesh == "multi"))
+    rules = (shd.TRAIN_RULES if args.shape.startswith(
+        ("train", "full_graph", "minibatch", "ogb", "molecule"))
+        else shd.DEFAULT_RULES)
+    with shd.use_mesh(mesh, rules):
+        cell = build_cell(get_arch(args.arch), args.shape)
+        in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cell.in_specs,
+                             is_leaf=lambda x: isinstance(
+                                 x, jax.sharding.PartitionSpec))
+        compiled = jax.jit(cell.fn, in_shardings=in_sh,
+                           donate_argnums=cell.donate).lower(
+            *cell.args).compile()
+    ranked, total = breakdown(compiled.as_text(), args.top, args.collectives)
+    kind = "collective" if args.collectives else "hbm"
+    print(f"total {kind} bytes/device: {total:.3e}")
+    for (op, tag), b in ranked:
+        print(f"{b:10.3e}  {100 * b / total:5.1f}%  {op:22s} {tag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,386 @@
+"""Loop-aware cost extraction from post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a
+scan-over-layers transformer reports ~1/L of its real FLOPs, and anything
+inside the flash-attention KV scan or the CE chunk scan is similarly
+undercounted. This module re-derives the roofline inputs directly from the
+HLO with while-loop trip multipliers:
+
+  flops            2·M·N·K per ``dot`` (K from the lhs operand's shape +
+                   lhs_contracting_dims; operand shapes resolved through a
+                   per-computation symbol table since CPU HLO prints bare
+                   ``%var`` references)
+  bytes            operand + output bytes of every top-level op at fusion
+                   boundaries (an HBM-traffic estimate: fusion internals
+                   stay in registers/VMEM)
+  collective bytes operand bytes of all-gather/all-reduce/reduce-scatter/
+                   all-to-all/collective-permute
+
+Trip counts come from the loop condition: scans compare the induction
+variable against a constant; we take the largest s32/u32 constant in the
+condition computation. Multipliers compose through nested loops.
+
+Validated in tests/test_hlo_cost.py against analytically-known programs
+(matmul, scan-of-matmuls, nested scans) and against unrolled probe
+lowerings of the real models.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0, "s2": 1, "u2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1, "f4e2m1fn": 1,
+    "f8e8m0fnu": 1, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|\S+))\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))")
+_VAR_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"\b[su](?:32|64)\[\]\s+constant\((\d+)\)")
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "add-dependency", "domain",
+    "opt-barrier", "call", "while", "conditional", "iota",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+#: callee references whose bodies are measured at the call boundary
+_BOUNDARY_CALL_KINDS = {
+    "fusion", "reduce", "sort", "scatter", "map", "reduce-window",
+    "select-and-scatter", "all-reduce", "reduce-scatter", "custom-call",
+    "select-and-scatter-done", "all-reduce-start",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _sig_bytes(sig: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES.get(dt, 0)
+               for dt, dims in _SHAPE_RE.findall(sig))
+
+
+def _sig_shapes(sig: str) -> list[tuple[str, list[int]]]:
+    return [(dt, [int(d) for d in dims.split(",")] if dims else [])
+            for dt, dims in _SHAPE_RE.findall(sig)]
+
+
+@dataclass
+class _Op:
+    var: str
+    kind: str
+    out_sig: str
+    operand_vars: list
+    line: str
+    is_root: bool = False
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)       # var -> out_sig
+    params: list = field(default_factory=list)        # positional param names
+    while_bodies: list = field(default_factory=list)  # (body, cond)
+    calls: list = field(default_factory=list)         # (callee, kind)
+
+
+_ATTR_CUT_RE = re.compile(
+    r",\s*(?:metadata=|backend_config=|sharding=|frontend_attributes=)")
+
+
+def _split_call(line: str, kind: str) -> tuple[str, str]:
+    """Return (operand_region, attr_region) of the op call."""
+    start = line.find(kind + "(")
+    lparen = start + len(kind)
+    depth = 0
+    for i in range(lparen, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[lparen + 1:i], line[i + 1:]
+    return line[lparen + 1:], ""
+
+
+def _parse(hlo: str) -> tuple[dict[str, _Comp], str]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in hlo.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        if not line or line.startswith(("HloModule", "//", "}")):
+            if line.startswith("}"):
+                cur = None
+            continue
+        # computation header, e.g. `%region_0.1 (arg: f32[2]) -> f32[2] {`
+        if line.endswith("{") and "->" in line and "=" not in line.split("->")[0]:
+            hdr = line.strip()
+            is_entry = hdr.startswith("ENTRY")
+            name_part = hdr[len("ENTRY"):].strip() if is_entry else hdr
+            name = name_part.split("(")[0].strip().lstrip("%").strip()
+            cur = _Comp(name)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            # header params populate the symbol table
+            paren = name_part[name_part.find("("):name_part.rfind("->")]
+            for pname, psig in _PARAM_RE.findall(paren):
+                cur.symbols[pname] = psig
+                cur.params.append(pname)
+            continue
+        if cur is None or "=" not in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        var, out_sig, kind = m.group(1), m.group(2), m.group(3)
+        cur.symbols[var] = out_sig
+        operands, attrs = _split_call(line, kind)
+        operand_vars = _VAR_RE.findall(operands)
+        cur.ops.append(_Op(var, kind, out_sig, operand_vars, line,
+                           is_root=line.lstrip().startswith("ROOT")))
+        if kind == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", attrs)
+            mc = re.search(r"condition=%?([\w.\-]+)", attrs)
+            cur.while_bodies.append(
+                (mb.group(1) if mb else None, mc.group(1) if mc else None))
+        else:
+            for key in ("calls", "to_apply", "true_computation",
+                        "false_computation"):
+                mm = re.search(key + r"=%?([\w.\-]+)", attrs)
+                if mm:
+                    cur.calls.append((mm.group(1), kind))
+            mm = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+            if mm:
+                for c in mm.group(1).split(","):
+                    cur.calls.append((c.strip().lstrip("%"), kind))
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO")
+    return comps, entry
+
+
+def _trip_count(comps: dict[str, _Comp], cond_name: str | None) -> int:
+    if cond_name is None or cond_name not in comps:
+        return 1
+    best = 1
+    for op in comps[cond_name].ops:
+        for c in _CONST_RE.findall(op.line):
+            best = max(best, int(c))
+    return best
+
+
+def _dot_flops(comp: _Comp, op: _Op) -> float:
+    m = _DOT_CONTRACT_RE.search(op.line)
+    if not m or not op.operand_vars:
+        return 0.0
+    lhs_sig = comp.symbols.get(op.operand_vars[0], "")
+    lhs_shapes = _sig_shapes(lhs_sig)
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    k = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    out_elems = sum(_shape_elems(dims) for _, dims in
+                    _SHAPE_RE.findall(op.out_sig))
+    return 2.0 * out_elems * k
+
+
+def _fusion_bytes(comps: dict[str, _Comp], comp: _Comp, op: _Op) -> tuple[int, int]:
+    """(operand_bytes, out_bytes) for a fusion call, slice-aware.
+
+    XLA's convention (and our naive one) charges a fusion's FULL operand
+    arrays, but a fusion whose body only dynamic-slices a big operand (the
+    scan pattern: slice layer i of a stacked [L, ...] carry) physically
+    reads just the slice. Decode_32k measured 67x inflated HBM traffic
+    under the naive rule. For each fusion parameter used exclusively by
+    dynamic-slice/gather ops we charge the slices' out-bytes; a root
+    dynamic-update-slice into a parameter charges 2x the update size.
+    """
+    callee_name = next((c for c, k in comp.calls
+                        if k == "fusion" and c in comps), None)
+    # fall back to naive accounting when the body isn't resolvable
+    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+    if m:
+        callee_name = m.group(1)
+    callee = comps.get(callee_name)
+    out_bytes = _sig_bytes(op.out_sig)
+    if callee is None:
+        return (sum(_sig_bytes(comp.symbols.get(v, ""))
+                    for v in op.operand_vars), out_bytes)
+    params = callee.params[: len(op.operand_vars)]
+    # Forward-propagate each param through the fusion graph: fusions are
+    # lazy, so a param consumed only via (elementwise ops ->)
+    # dynamic-slice physically reads just the slice. Any consumption by a
+    # non-elementwise, non-slicing op counts as a full read.
+    passthrough = {
+        "convert", "copy", "bitcast", "transpose", "reshape", "negate",
+        "add", "subtract", "multiply", "divide", "maximum", "minimum",
+        "select", "compare", "and", "or", "not", "exponential", "tanh",
+        "rsqrt", "sqrt", "abs", "clamp", "sign", "floor", "power",
+    }
+    consumers: dict[str, list] = defaultdict(list)
+    for cop in callee.ops:
+        for j, v in enumerate(cop.operand_vars):
+            consumers[v].append((cop, j))
+    root_op = next((o for o in callee.ops if o.is_root),
+                   callee.ops[-1] if callee.ops else None)
+    # follow elementwise chains backward from the root to find a DUS root
+    # (fusions like convert(dynamic-update-slice(...)) are still in-place)
+    _seen = set()
+    while (root_op is not None and root_op.kind in
+           ("convert", "copy", "bitcast") and root_op.operand_vars
+           and root_op.var not in _seen):
+        _seen.add(root_op.var)
+        prev = next((o for o in callee.ops
+                     if o.var == root_op.operand_vars[0]), None)
+        if prev is None:
+            break
+        root_op = prev
+
+    def accessed_bytes(pname: str) -> int | None:
+        """Slice-bounded read bytes for a param, or None if fully read."""
+        total = 0
+        frontier = [pname]
+        seen = {pname}
+        while frontier:
+            v = frontier.pop()
+            for cop, j in consumers.get(v, ()):
+                if cop.kind in ("dynamic-slice", "gather") and j == 0:
+                    total += _sig_bytes(cop.out_sig)
+                elif cop.kind == "dynamic-update-slice" and j == 0:
+                    upd = (cop.operand_vars[1]
+                           if len(cop.operand_vars) > 1 else None)
+                    total += _sig_bytes(callee.symbols.get(upd, ""))
+                elif cop.kind in passthrough:
+                    if cop.var not in seen:
+                        seen.add(cop.var)
+                        frontier.append(cop.var)
+                elif cop.kind == "parameter":
+                    continue
+                else:
+                    return None  # full use
+        return total if total else None
+
+    operand_bytes = 0
+    for pos, v in enumerate(op.operand_vars):
+        pname = params[pos] if pos < len(params) else None
+        sig = comp.symbols.get(v, "")
+        sliced = accessed_bytes(pname) if pname else None
+        full = _sig_bytes(sig)
+        operand_bytes += min(sliced, full) if sliced is not None else full
+    if (root_op is not None and root_op.kind == "dynamic-update-slice"
+            and root_op.operand_vars):
+        # in-place DUS root: the fusion writes only the update region
+        upd = (root_op.operand_vars[1]
+               if len(root_op.operand_vars) > 1 else None)
+        upd_bytes = _sig_bytes(callee.symbols.get(upd, ""))
+        if upd_bytes:
+            out_bytes = upd_bytes
+    return operand_bytes, out_bytes
+
+
+def analyze(hlo: str) -> dict:
+    """Loop-aware flops / bytes / collective traffic (per device)."""
+    comps, entry = _parse(hlo)
+
+    # Multipliers through the while-loop call graph.
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order, seen = [entry], {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult[name]
+        for body, cond in comp.while_bodies:
+            trips = _trip_count(comps, cond)
+            for sub, mul in ((body, m * trips), (cond, m * (trips + 1))):
+                if sub:
+                    mult[sub] += mul
+                    if sub not in seen:
+                        seen.add(sub)
+                        order.append(sub)
+        for callee, kind in comp.calls:
+            if kind in _BOUNDARY_CALL_KINDS:
+                continue
+            mult[callee] += m
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+
+    fusion_targets = {callee for comp in comps.values()
+                      for callee, kind in comp.calls
+                      if kind in _BOUNDARY_CALL_KINDS}
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, float] = defaultdict(float)
+    for name, comp in comps.items():
+        if name in fusion_targets:
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.kind in _SKIP_OPS or op.kind.endswith("-done"):
+                continue
+            base = (op.kind[:-6] if op.kind.endswith("-start") else op.kind)
+            out_bytes = _sig_bytes(op.out_sig)
+            if base in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced/gathered region, not the operand
+                operand_bytes = out_bytes
+            elif base == "dynamic-update-slice":
+                # in-place DUS: read+write of the update region only
+                upd = op.operand_vars[1] if len(op.operand_vars) > 1 else None
+                operand_bytes = _sig_bytes(comp.symbols.get(upd, ""))
+                out_bytes = operand_bytes
+            elif base == "scatter":
+                upd = op.operand_vars[2] if len(op.operand_vars) > 2 else None
+                operand_bytes = 2 * _sig_bytes(comp.symbols.get(upd, ""))
+                out_bytes = operand_bytes
+            elif base == "fusion":
+                operand_bytes, out_bytes = _fusion_bytes(comps, comp, op)
+            else:
+                operand_bytes = sum(_sig_bytes(comp.symbols.get(v, ""))
+                                    for v in op.operand_vars)
+            if base in _COLLECTIVES:
+                coll_bytes[base] += m * operand_bytes
+                coll_counts[base] += m
+            bytes_ += m * (out_bytes + operand_bytes)
+            if op.kind == "dot":
+                flops += m * _dot_flops(comp, op)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_,
+        "collective_bytes": dict(coll_bytes),
+        "collective_counts": {k: int(v) for k, v in coll_counts.items()},
+        "collective_total_bytes": sum(coll_bytes.values()),
+        "collective_n_ops": int(sum(coll_counts.values())),
+    }

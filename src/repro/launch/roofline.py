@@ -1,0 +1,52 @@
+"""Roofline terms from a dry-run record (TPU v5e constants).
+
+    compute_s    = per-device HLO FLOPs / 197 TF/s bf16
+    memory_s     = per-device HLO bytes accessed / 819 GB/s HBM
+    collective_s = per-device collective operand bytes / 50 GB/s ICI
+
+(`cost_analysis()` and the HLO parse are both post-SPMD per-device
+quantities, so no division by chip count is needed here; multiplying both
+sides of the assignment's formulas by `chips` gives the same ratios.)
+
+Extras recorded per cell: MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference)
+with N = active params, and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs ×
+chips) which exposes remat/dispatch/padding waste.
+"""
+
+from __future__ import annotations
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def roofline_terms(rec: dict) -> dict:
+    cost = rec.get("cost", {})
+    coll = rec.get("collectives", {})
+    n_dev = rec.get("n_devices", 1)
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes_accessed", 0.0)
+    coll_dev = float(coll.get("total_bytes", 0))
+
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+
+    out = dict(terms)
+    out["dominant"] = dominant.replace("_s", "")
+    out["step_lower_bound_s"] = bound_s
+    model_flops = rec.get("meta", {}).get("model_flops", 0.0)
+    hlo_flops_total = flops_dev * n_dev
+    if hlo_flops_total > 0:
+        out["model_flops"] = model_flops
+        out["useful_flops_ratio"] = model_flops / hlo_flops_total
+    if bound_s > 0:
+        # fraction of peak achievable if nothing overlaps = compute/bound
+        out["roofline_fraction"] = compute_s / bound_s
+        # MFU upper bound: useful model FLOPs over peak for the bound time
+        if model_flops > 0:
+            out["mfu_upper_bound"] = (model_flops / n_dev / bound_s
+                                      / PEAK_FLOPS_BF16)
+    return out

@@ -1,0 +1,89 @@
+"""Production serving driver: SkewRoute-fronted multi-tier LM fleet.
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 40 [--budget 0.4]
+
+Runs the paper's deployment shape end to end on small-config tiers:
+retrieval scoring -> fused skew metrics -> calibrated threshold routing ->
+per-tier engines generating real tokens, with cost/latency telemetry.
+On TPU the tier configs switch to the assigned archs (yi-6b small /
+gemma-7b medium / internlm2-20b large) on the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--budget", type=float, default=0.4,
+                    help="target large-tier call ratio")
+    ap.add_argument("--metric", default="gini",
+                    choices=["area", "cumulative", "entropy", "gini"])
+    args = ap.parse_args()
+
+    from repro.core import RouterConfig, calibrate_threshold
+    from repro.models.layers import LMConfig
+    from repro.retrieval import scorer as sc
+    from repro.retrieval import synthetic
+    from repro.serving.engine import make_engine
+    from repro.serving.router_service import SkewRouteDispatcher
+
+    print("== retrieval stack ==")
+    data = synthetic.make_dataset("cwq", n_queries=args.requests + 100,
+                                  n_entities=4000)
+    cfg = sc.ScorerConfig(lr=2e-3)
+    params = sc.train_scorer(data, cfg, n_steps=150)
+
+    calib = []
+    for q in data.queries[: 100]:
+        _, probs = sc.retrieve(params, data.kg, data.entity_emb,
+                               data.relation_emb, q, cfg)
+        calib.append(np.pad(probs, (0, 100 - len(probs))))
+    theta = calibrate_threshold(jnp.asarray(np.stack(calib)), args.budget,
+                                args.metric)
+    dispatcher = SkewRouteDispatcher(
+        RouterConfig(metric=args.metric, thresholds=(theta,)),
+        ["qwen7b", "qwen72b"])
+    print(f"{args.metric} threshold {theta:.4f} for {args.budget:.0%} budget")
+
+    print("== tier engines ==")
+    tiers = [
+        make_engine(LMConfig(name="small-tier", n_layers=2, d_model=64,
+                             n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                             vocab=512, dtype=jnp.float32)),
+        make_engine(LMConfig(name="large-tier", n_layers=4, d_model=128,
+                             n_heads=8, n_kv_heads=4, head_dim=16, d_ff=256,
+                             vocab=512, dtype=jnp.float32)),
+    ]
+
+    t0 = time.monotonic()
+    generated = 0
+    for q in data.queries[100: 100 + args.requests]:
+        _, probs = sc.retrieve(params, data.kg, data.entity_emb,
+                               data.relation_emb, q, cfg)
+        rec = dispatcher.dispatch(probs)
+        prompt = (np.abs(np.frombuffer(q.query_emb.tobytes(), np.uint8)[:16])
+                  .astype(np.int32)[None] % 512)
+        out = tiers[rec.tier].generate(prompt, max_new=8)
+        generated += out.generated_tokens
+    wall = time.monotonic() - t0
+
+    s = dispatcher.stats
+    from repro.core.cost import CostModel
+    cm = CostModel()
+    all_large = cm.request_cost("qwen72b") * s.n_requests
+    print(f"\nserved {s.n_requests} requests / {generated} tokens in "
+          f"{wall:.1f}s; tier mix {s.tier_counts} "
+          f"(large ratio {s.large_call_ratio:.2f})")
+    print(f"est. cost ${s.total_cost:.4f} vs all-large ${all_large:.4f} "
+          f"({100 * (1 - s.total_cost / all_large):.0f}% saved)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Flash attention in pure XLA with a memory-lean custom VJP.
+
+Why this exists (dry-run finding, EXPERIMENTS.md §Perf iteration 0): naive
+attention at train_4k materializes [B,H,S,S] fp32 scores (~34 GiB/device
+for yi-6b) and autodiff through an online-softmax scan checkpoints every
+block carry — both blow the 16 GiB v5e budget. Flash semantics fix it:
+
+  fwd: online-softmax over KV blocks; residuals = (q, k, v, out, lse) only.
+  bwd: recompute P blockwise from lse; accumulate dq as a scan carry and
+       emit dk/dv per block — no [S, S] tensor ever exists in either pass.
+
+GQA note: K/V are expanded to the full head count here (repeat along the
+head axis) so every tensor carries an H dim that the `model` mesh axis
+shards cleanly (merged KV·G dims are unshardable when kv·g doesn't factor
+through 16 — DESIGN §4). The Pallas TPU kernel
+(`repro.kernels.flash_attention`) implements the same contract with VMEM
+tiling; this module is the XLA fallback + its numerical oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+
+_NEG_INF = -1e30
+
+
+def _expand_kv(x: jax.Array, h: int) -> jax.Array:
+    """[B, S, KV, D] -> [B, S, H, D] by repeating each kv head h//kv times."""
+    kv = x.shape[2]
+    if kv == h:
+        return x
+    return jnp.repeat(x, h // kv, axis=2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    block: int = 1024) -> jax.Array:
+    """Causal attention. q: [B,Sq,H,D]; k/v: [B,Sk,KV,D] -> [B,Sq,H,D].
+
+    Causal alignment: query i attends to keys <= i + (Sk - Sq), i.e. the
+    queries are the LAST Sq positions of the key sequence (standard for
+    both full training (Sq==Sk) and chunked prefill (Sq<Sk)).
+    """
+    out, _ = _flash_fwd(q, k, v, block)
+    return out
+
+
+def _blocks(x: jax.Array, block: int):
+    b, s, h, d = x.shape
+    n = s // block
+    return x.reshape(b, n, block, h, d).transpose(1, 0, 2, 3, 4)  # [n,B,blk,H,D]
+
+
+def _flash_fwd(q, k, v, block):
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    assert sk % block == 0, f"kv len {sk} not divisible by block {block}"
+    offset = sk - sq
+    scale = d ** -0.5
+    kf = _blocks(_expand_kv(k, h), block)
+    vf = _blocks(_expand_kv(v, h), block)
+    q_pos = jnp.arange(sq) + offset
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, i = xs
+        key_pos = i * block + jnp.arange(block)
+        # §Perf D2/P1: bf16 dot inputs, f32 accumulation — no materialized
+        # f32 copies of q/k/v; p cast to the input dtype for the PV matmul
+        # (MXU-native, f32 accumulation via preferred_element_type).
+        s_blk = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                           preferred_element_type=jnp.float32) * scale
+        mask = key_pos[None, :] <= q_pos[:, None]
+        s_blk = jnp.where(mask[None, None], s_blk, _NEG_INF)
+        m_cur = jnp.max(s_blk, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s_blk - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    n = sk // block
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kf, vf, jnp.arange(n)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(block, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    offset = sk - sq
+    scale = d ** -0.5
+    kf = _blocks(_expand_kv(k, h), block)
+    vf = _blocks(_expand_kv(v, h), block)
+    # §Perf A2: the output cotangent arrives sharded like the wo
+    # projection (merged h*d over `model`); p/ds are sequence-sharded when
+    # heads don't divide the axis (A1). The mismatched einsum made GSPMD
+    # ALL-GATHER the [B,H,Sq,blk] probability tiles (22% of arctic
+    # collective bytes). Re-pin dout to the attention's own layout.
+    if shd.active_mesh() is not None and h % shd.mesh_axis_size("model"):
+        dout = shd.logical(dout, "batch", "kv_seq", None, None)
+    do = dout.transpose(0, 2, 1, 3)                           # [B,H,Sq,D]
+    of = out.transpose(0, 2, 1, 3)
+    delta = jnp.einsum("bhqd,bhqd->bhq", do, of,
+                       preferred_element_type=jnp.float32)    # [B,H,Sq]
+    q_pos = jnp.arange(sq) + offset
+    in_dt = q.dtype
+
+    def step(dq_acc, xs):
+        kb, vb, i = xs
+        key_pos = i * block + jnp.arange(block)
+        s_blk = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                           preferred_element_type=jnp.float32) * scale
+        mask = key_pos[None, :] <= q_pos[:, None]
+        s_blk = jnp.where(mask[None, None], s_blk, _NEG_INF)
+        p = jnp.exp(s_blk - lse[..., None])                   # [B,H,Sq,blk]
+        dv_blk = jnp.einsum("bhqk,bhqd->bkhd", p.astype(in_dt), do,
+                            preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", do, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[..., None])                      # [B,H,Sq,blk]
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds.astype(in_dt), kb,
+                                     preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bhqk,bqhd->bkhd", ds.astype(in_dt), q,
+                            preferred_element_type=jnp.float32) * scale
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    n = sk // block
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+        step, dq0, (kf, vf, jnp.arange(n)))
+
+    def _unblock(xb):  # [n,B,blk,H,D] -> [B,Sk,H,D]
+        return xb.transpose(1, 0, 2, 3, 4).reshape(b, sk, h, d)
+
+    dk = _unblock(dk_blocks)   # qs already carries the scale
+    dv = _unblock(dv_blocks)
+    if kv != h:  # fold grouped-head grads back onto the kv heads
+        g = h // kv
+        dk = dk.reshape(b, sk, kv, g, d).sum(axis=3)
+        dv = dv.reshape(b, sk, kv, g, d).sum(axis=3)
+    return ((dq * scale).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

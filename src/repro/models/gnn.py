@@ -1,0 +1,149 @@
+"""Graph attention network (GAT, Velickovic et al. 2018) on segment ops.
+
+Assigned arch ``gat-cora``: 2 layers, 8 hidden units x 8 heads, attention
+aggregator. The same module runs all four assigned shapes:
+
+* ``full_graph_sm``  — Cora full-batch (2708 nodes / 10556 edges / f=1433)
+* ``minibatch_lg``   — fanout-(15,10) sampled training on a Reddit-scale
+                       graph (``retrieval/sampler.py`` provides the sampler)
+* ``ogb_products``   — full-batch 2.45M nodes / 61.9M edges / f=100
+* ``molecule``       — 128 graphs x 30 nodes batched via graph-id readout
+
+Message passing = SDDMM (edge scores) -> segment-softmax -> SpMM
+(segment-sum), the JAX-native formulation of sparse attention aggregation.
+Edge arrays are padded to static shapes; padded edges target the dummy
+node slot N (features carry one extra zero row) — see `segment.pad_edges`.
+
+SkewRoute link (DESIGN §5): the per-destination attention distribution this
+model produces over a query-anchored subgraph is itself a retrieval score
+distribution — `repro.retrieval.scorer.GATScorer` reuses these layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import segment as seg
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    aggregator: str = "attn"
+    negative_slope: float = 0.2
+    dtype: jnp.dtype = jnp.float32
+    remat: bool = False
+
+    def layer_dims(self, d_feat: int, n_classes: int) -> list[tuple[int, int, int]]:
+        """[(d_in, n_heads, d_out)] per layer. Hidden layers concat heads;
+        the output layer uses 1 averaged head onto n_classes (GAT paper)."""
+        dims = []
+        d_in = d_feat
+        for _ in range(self.n_layers - 1):
+            dims.append((d_in, self.n_heads, self.d_hidden))
+            d_in = self.n_heads * self.d_hidden
+        dims.append((d_in, 1, n_classes))
+        return dims
+
+
+def init_gat_layer(key: jax.Array, d_in: int, heads: int, d_out: int,
+                   dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = (2.0 / d_in) ** 0.5
+    return {
+        "w": (jax.random.normal(k1, (d_in, heads * d_out)) * s).astype(dtype),
+        "a_src": (jax.random.normal(k2, (heads, d_out)) * s).astype(dtype),
+        "a_dst": (jax.random.normal(k3, (heads, d_out)) * s).astype(dtype),
+        "bias": jnp.zeros((heads * d_out,), dtype),
+    }
+
+
+def init_params(key: jax.Array, cfg: GNNConfig, d_feat: int, n_classes: int) -> dict:
+    dims = cfg.layer_dims(d_feat, n_classes)
+    keys = jax.random.split(key, len(dims))
+    return {"gnn": {f"layer{i}": init_gat_layer(k, *d, cfg.dtype)
+                    for i, (k, d) in enumerate(zip(keys, dims))}}
+
+
+def gat_layer(p: dict, x: jax.Array, src: jax.Array, dst: jax.Array,
+              n_nodes: int, heads: int, d_out: int, cfg: GNNConfig,
+              final: bool) -> jax.Array:
+    """One GAT layer. x: [N+1, d_in] (slot N = dummy for padded edges).
+
+    Returns [N+1, heads*d_out] (concat) or [N+1, d_out] (mean, final layer).
+    """
+    h = shd.logical(x @ p["w"], "node", None)             # [N+1, H*D]
+    hh = h.reshape(-1, heads, d_out)
+    # SDDMM: per-edge attention logits from source/destination projections.
+    e_src = jnp.sum(hh * p["a_src"], axis=-1)             # [N+1, H]
+    e_dst = jnp.sum(hh * p["a_dst"], axis=-1)
+    logits = e_src[src] + e_dst[dst]                      # [E, H]
+    logits = jax.nn.leaky_relu(logits, cfg.negative_slope)
+    logits = shd.logical(logits, "edge", None)
+    # Edge softmax per destination (dummy slot absorbs padded edges).
+    alpha = seg.segment_softmax(logits, dst, n_nodes + 1)
+    msg = alpha[..., None] * hh[src]                      # [E, H, D]
+    agg = seg.segment_sum(msg, dst, n_nodes + 1)          # [N+1, H, D]
+    if final:
+        out = jnp.mean(agg, axis=1)                       # average heads
+    else:
+        out = jax.nn.elu(agg.reshape(-1, heads * d_out) + p["bias"])
+    return out
+
+
+def forward(params: dict, cfg: GNNConfig, feats: jax.Array, src: jax.Array,
+            dst: jax.Array, d_feat: int, n_classes: int) -> jax.Array:
+    """feats: [N, d_feat] -> logits [N, n_classes]. Appends the dummy row."""
+    n = feats.shape[0]
+    x = jnp.concatenate([feats, jnp.zeros((1, feats.shape[1]), feats.dtype)], 0)
+    dims = cfg.layer_dims(d_feat, n_classes)
+    for i, (d_in, heads, d_out) in enumerate(dims):
+        x = gat_layer(params["gnn"][f"layer{i}"], x, src, dst, n, heads,
+                      d_out, cfg, final=(i == len(dims) - 1))
+    return x[:n]
+
+
+def node_loss(params: dict, cfg: GNNConfig, batch: dict, d_feat: int,
+              n_classes: int) -> jax.Array:
+    """Masked node-classification cross-entropy.
+
+    batch: feats [N, F], src/dst [E], labels [N], label_mask [N] bool.
+    """
+    logits = forward(params, cfg, batch["feats"], batch["src"], batch["dst"],
+                     d_feat, n_classes).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(batch["labels"], 0)[:, None],
+                               axis=-1)[:, 0]
+    per_node = logz - gold
+    mask = batch["label_mask"].astype(jnp.float32)
+    return jnp.sum(per_node * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def minibatch_loss(params: dict, cfg: GNNConfig, batch: dict, d_feat: int,
+                   n_classes: int) -> jax.Array:
+    """Sampled-subgraph loss: only the first ``n_seeds`` rows are seeds."""
+    return node_loss(params, cfg, batch, d_feat, n_classes)
+
+
+def graph_loss(params: dict, cfg: GNNConfig, batch: dict, d_feat: int,
+               n_classes: int) -> jax.Array:
+    """Batched-small-graph classification (``molecule`` shape).
+
+    batch: feats [B*N, F], src/dst [B*E], graph_ids [B*N], labels [B].
+    """
+    node_logits = forward(params, cfg, batch["feats"], batch["src"],
+                          batch["dst"], d_feat, n_classes)
+    n_graphs = batch["labels"].shape[0]
+    graph_logits = seg.scatter_mean_by(batch["graph_ids"], node_logits,
+                                       n_graphs).astype(jnp.float32)
+    logz = jax.nn.logsumexp(graph_logits, axis=-1)
+    gold = jnp.take_along_axis(graph_logits, batch["labels"][:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,337 @@
+"""Shared transformer building blocks: norms, RoPE, GQA attention, GLU MLPs,
+and MoE (top-k routed experts with capacity dispatch, optional shared expert).
+
+Pure-JAX (no flax): params are nested dicts of jnp arrays, apply functions
+are free functions. Layer-stacked variants (leading L dim on every param)
+feed ``jax.lax.scan`` in the decoder (`repro.models.transformer`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden
+    capacity_factor: float = 1.25
+    shared_expert: bool = False  # dense residual branch (Arctic / Llama-4)
+    group_size: int = 512        # GShard dispatch group (tokens per group)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    activation: str = "swiglu"  # swiglu | geglu
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    scale_embed: bool = False   # gemma-style sqrt(d_model) embedding scale
+    dtype: jnp.dtype = jnp.bfloat16
+    # Training-time knobs
+    remat_policy: str = "full"  # none | full | dots
+    loss_chunk: int = 512       # sequence-chunked cross entropy
+    # Serving-time knobs
+    use_flash_kernel: bool = False        # Pallas path (TPU target)
+    attn_impl: Optional[str] = None        # None=auto | full | chunked
+    decode_attn_impl: Optional[str] = None # None=auto | full | chunked
+    # Cost-probe knobs (launch/dryrun.py): scan bodies are unrolled inside a
+    # trip-1 loop so cost_analysis() counts every layer exactly once.
+    scan_unroll: int = 1
+    flash_block: Optional[int] = None      # force flash KV block size
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS = 6·N·D roofline term)."""
+        c = self
+        emb = c.vocab * c.d_model
+        attn = c.d_model * (c.qkv_dim + 2 * c.kv_dim) + c.qkv_dim * c.d_model
+        if c.moe is None:
+            mlp = 3 * c.d_model * c.d_ff
+        else:
+            mlp = c.moe.n_experts * 3 * c.d_model * c.moe.d_ff
+            mlp += c.d_model * c.moe.n_experts  # router
+            if c.moe.shared_expert:
+                mlp += 3 * c.d_model * c.d_ff
+        norms = 2 * c.d_model
+        per_layer = attn + mlp + norms
+        head = 0 if c.tie_embeddings else c.d_model * c.vocab
+        return emb + c.n_layers * per_layer + c.d_model + head
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        c = self
+        if c.moe is None:
+            return self.n_params
+        emb = c.vocab * c.d_model
+        attn = c.d_model * (c.qkv_dim + 2 * c.kv_dim) + c.qkv_dim * c.d_model
+        mlp = c.moe.top_k * 3 * c.d_model * c.moe.d_ff + c.d_model * c.moe.n_experts
+        if c.moe.shared_expert:
+            mlp += 3 * c.d_model * c.d_ff
+        head = 0 if c.tie_embeddings else c.d_model * c.vocab
+        return emb + c.n_layers * (attn + mlp + 2 * c.d_model) + c.d_model + head
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.bfloat16) -> jax.Array:
+    # Stored as delta from 1.0 (gemma convention); rms_norm adds 1.
+    return jnp.zeros((d,), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim//2] (fp32)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [B, S, N, Dh]; positions: [B, S] or [S]."""
+    inv_freq = rope_frequencies(x.shape[-1], theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [B,S,Dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: LMConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.qkv_dim, cfg.kv_dim
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, qd)) * s).astype(cfg.dtype),
+        "wk": (jax.random.normal(k2, (d, kvd)) * s).astype(cfg.dtype),
+        "wv": (jax.random.normal(k3, (d, kvd)) * s).astype(cfg.dtype),
+        "wo": (jax.random.normal(k4, (qd, d)) * (qd ** -0.5)).astype(cfg.dtype),
+    }
+
+
+def gqa_attention(
+    q: jax.Array,          # [B, Sq, H, Dh]
+    k: jax.Array,          # [B, Sk, KV, Dh]
+    v: jax.Array,          # [B, Sk, KV, Dh]
+    mask: Optional[jax.Array],  # broadcastable to [B, H, Sq, Sk] (bool) or None
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference grouped-query attention (XLA path). Returns [B, Sq, H, Dh].
+
+    The Pallas flash path (``repro.kernels.flash_attention``) replaces this
+    for long prefill; this einsum formulation is the oracle + default.
+    """
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, sq, kv, groups, dh)
+    # §Perf D2: keep bf16 dot inputs + f32 accumulation. Pre-casting the
+    # KV cache to f32 materialized a full-precision copy of the cache per
+    # layer per decode step (dry-run: 2x the whole-cache traffic).
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        # mask arrives [B?, H?, Sq, Sk]; reshape H -> (KV, G)
+        mask_ = jnp.broadcast_to(mask, (b, h, sq, k.shape[1])) if mask.ndim == 4 else mask
+        mask_ = mask_.reshape(b, kv, groups, sq, k.shape[1])
+        logits = jnp.where(mask_, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(q.dtype)
+    return out.reshape(b, sq, h, dh)
+
+
+def causal_mask(sq: int, sk: int, offset: int = 0) -> jax.Array:
+    """[1, 1, Sq, Sk] boolean causal mask; query i attends to keys <= i+offset."""
+    qi = jnp.arange(sq)[:, None] + offset
+    ki = jnp.arange(sk)[None, :]
+    return (ki <= qi)[None, None]
+
+
+# ---------------------------------------------------------------------------
+# Dense GLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, cfg: LMConfig, d_ff: Optional[int] = None) -> dict:
+    d_ff = cfg.d_ff if d_ff is None else d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "w_gate": (jax.random.normal(k1, (d, d_ff)) * d ** -0.5).astype(cfg.dtype),
+        "w_up": (jax.random.normal(k2, (d, d_ff)) * d ** -0.5).astype(cfg.dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d)) * d_ff ** -0.5).astype(cfg.dtype),
+    }
+
+
+def glu_mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    if activation == "swiglu":
+        act = jax.nn.silu(gate)
+    elif activation == "geglu":
+        act = jax.nn.gelu(gate, approximate=True)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return (act * up) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (capacity-based top-k dispatch via scatter/gather)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key: jax.Array, cfg: LMConfig) -> dict:
+    assert cfg.moe is not None
+    m = cfg.moe
+    keys = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, m.d_ff, m.n_experts
+    params = {
+        "router": (jax.random.normal(keys[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(keys[1], (e, d, f)) * d ** -0.5).astype(cfg.dtype),
+        "w_up": (jax.random.normal(keys[2], (e, d, f)) * d ** -0.5).astype(cfg.dtype),
+        "w_down": (jax.random.normal(keys[3], (e, f, d)) * f ** -0.5).astype(cfg.dtype),
+    }
+    if m.shared_expert:
+        params["shared"] = init_mlp(keys[4], cfg)
+    return params
+
+
+def moe_groups(n_tokens: int, moe: MoEConfig) -> tuple[int, int]:
+    """(n_groups, tokens_per_group) for GShard dispatch. Powers-of-two
+    token counts (all assigned shapes) split evenly; tiny batches use one
+    group."""
+    if n_tokens <= moe.group_size:
+        return 1, n_tokens
+    g = n_tokens // moe.group_size
+    while n_tokens % g:
+        g -= 1
+    return g, n_tokens // g
+
+
+def moe_capacity(tokens_per_group: int, moe: MoEConfig) -> int:
+    cap = int(tokens_per_group * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(cap - cap % -8, 8)  # round UP to a lane-friendly multiple of 8
+
+
+def moe_mlp(params: dict, x: jax.Array, cfg: LMConfig) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed experts, GShard grouped-einsum dispatch with drops.
+
+    x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    Tokens reshape to [G, Tg, D] groups; dispatch/combine are one-hot
+    einsums [G, Tg, E, C] with per-group capacity C — the formulation
+    GSPMD partitions cleanly (groups shard over (pod, data); experts and
+    their weights over model). Keeping Tg small (``group_size``) bounds
+    the dispatch-einsum overhead to a few percent of expert FLOPs while
+    the [G,Tg,E,C] mask stays tens-of-MB per device. Scatter/gather
+    dispatch (tutel-style) defeats the GSPMD partitioner — it replicates
+    the [E,C,D] buffers (dry-run: 153 GiB/device on arctic-480b).
+    Overflow tokens drop (they keep the shared/residual path) — GShard
+    semantics.
+    """
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    t = b * s
+    g, tg = moe_groups(t, m)
+    cap = moe_capacity(tg, m)
+    k = m.top_k
+    xt = x.reshape(t, d)
+
+    # bf16 matmul, f32 logits: casting xt to f32 materializes a full-token
+    # f32 copy per layer (dry-run: +1.75 GiB/layer/device on arctic-480b)
+    gate_logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    top_w, top_e = jax.lax.top_k(gate_logits, k)                # [T, k]
+    top_w = jax.nn.softmax(top_w, axis=-1)
+
+    # Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], m.n_experts,
+                                      dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux_loss = m.n_experts * jnp.sum(density * density_proxy)
+
+    # Slot positions: GShard priority — slot-0 of every token in the group
+    # first, then slot-1, ... (k-major exclusive cumsum).
+    oh = jax.nn.one_hot(top_e.reshape(g, tg, k), m.n_experts, dtype=jnp.int32)
+    ohk = oh.transpose(0, 2, 1, 3).reshape(g, k * tg, m.n_experts)
+    pos = jnp.cumsum(ohk, axis=1) - ohk                          # exclusive
+    keep = (pos < cap) & (ohk > 0)
+    disp_kc = jnp.where(keep, pos, cap)                          # cap = drop
+    # [G, kTg, E, C] one-hot over capacity (index==cap -> all-zero row).
+    disp = jax.nn.one_hot(disp_kc, cap, dtype=cfg.dtype)
+    disp = disp.reshape(g, k, tg, m.n_experts, cap).transpose(0, 2, 1, 3, 4)
+    dispatch = jnp.sum(disp, axis=2)                             # [G,Tg,E,C]
+    wk = top_w.reshape(g, tg, k).astype(cfg.dtype)
+    combine = jnp.einsum("gtkec,gtk->gtec", disp, wk)
+    dispatch = shd.logical(dispatch, "dp", None, "expert", None)
+    combine = shd.logical(combine, "dp", None, "expert", None)
+
+    # Dispatch -> expert FFN -> combine, all as einsums.
+    xg = shd.logical(x.reshape(g, tg, d).astype(cfg.dtype), "dp", None, None)
+    buf = jnp.einsum("gtec,gtd->gecd", dispatch, xg)
+    buf = shd.logical(buf, "dp", "expert", None, None)
+    gate = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+    out_buf = jnp.einsum("gecf,efd->gecd", act * up, params["w_down"])
+    out_buf = shd.logical(out_buf, "dp", "expert", None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine, out_buf)
+
+    y = y.reshape(t, d)
+    if m.shared_expert:
+        y = y + glu_mlp(params["shared"], xt, cfg.activation)
+    return y.reshape(b, s, d), aux_loss

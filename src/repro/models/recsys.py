@@ -1,0 +1,418 @@
+"""Recommendation/ranking models: DLRM, DCN-v2, DeepFM, DIEN.
+
+Substrate notes (DESIGN §2): JAX has no native EmbeddingBag or CSR sparse,
+so the embedding layer here is built from ``jnp.take`` over a single
+concatenated table (one [sum_vocab, dim] array; per-field row offsets) plus
+``segment_sum`` for multi-hot bags — this IS the system's embedding engine,
+and `repro.kernels.embedding_bag` is its Pallas TPU fast path.
+
+Each model exposes:
+  * ``init_params(key, cfg)``
+  * ``forward(params, cfg, batch) -> logits [B]`` (serve_p99 / serve_bulk)
+  * ``loss(params, cfg, batch) -> BCE`` (train_batch)
+  * ``retrieval_scores(params, cfg, batch) -> [B, n_candidates]``
+    (retrieval_cand: one user representation dotted against the candidate
+    item-embedding block — a single batched matmul, not a loop).
+
+SkewRoute link: ``retrieval_scores``/``forward`` outputs are score
+distributions over candidates; `examples/recsys_routing.py` routes between
+a small and a large ranker on their skewness (DESIGN §5 generalization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as shd
+
+# ---------------------------------------------------------------------------
+# Published vocab tables
+# ---------------------------------------------------------------------------
+
+#: Criteo Terabyte (MLPerf DLRM benchmark) per-table row counts.
+CRITEO_TB_VOCABS: tuple[int, ...] = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36)
+
+#: Criteo Kaggle per-field vocab (DCN-v2 paper's dataset).
+CRITEO_KAGGLE_VOCABS: tuple[int, ...] = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18,
+    15, 286181, 105, 142572)
+
+#: DIEN (Amazon Books): users / items / categories.
+AMAZON_BOOKS_VOCABS = {"user": 543060, "item": 367983, "cat": 1601}
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    model: str                       # dlrm | dcn_v2 | deepfm | dien
+    n_dense: int
+    n_sparse: int
+    embed_dim: int
+    vocab_sizes: tuple[int, ...]
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    deep_mlp: tuple[int, ...] = ()
+    n_cross_layers: int = 0
+    interaction: str = "dot"         # dot | cross | fm | augru
+    # DIEN only
+    seq_len: int = 0
+    gru_dim: int = 0
+    scan_unroll: int = 1  # cost-probe knob (see launch/dryrun.py)
+    dtype: jnp.dtype = jnp.float32
+    param_dtype: jnp.dtype = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Row count padded to 512 so the table row-shards on any mesh."""
+        t = self.total_vocab
+        return -(-t // 512) * 512
+
+    @property
+    def row_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]).astype(np.int64)
+
+    @property
+    def n_embedding_params(self) -> int:
+        return self.total_vocab * self.embed_dim
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+
+
+def init_tables(key: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """One concatenated [sum_vocab, dim] table (row-sharded over 'table')."""
+    scale = cfg.embed_dim ** -0.5
+    return (jax.random.normal(key, (cfg.padded_vocab, cfg.embed_dim)) *
+            scale).astype(cfg.param_dtype)
+
+
+def embedding_lookup(tables: jax.Array, cfg: RecsysConfig,
+                     field_ids: jax.Array) -> jax.Array:
+    """One-hot per-field lookup. field_ids: [B, F] local ids -> [B, F, dim]."""
+    offsets = jnp.asarray(cfg.row_offsets)
+    global_ids = field_ids + offsets[None, : field_ids.shape[1]]
+    out = jnp.take(tables, global_ids, axis=0)
+    return shd.logical(out, "batch", None, None)
+
+
+def embedding_bag(tables: jax.Array, global_ids: jax.Array,
+                  weights: Optional[jax.Array] = None,
+                  combiner: str = "sum") -> jax.Array:
+    """Multi-hot bag: global_ids [B, nnz] (-1 = pad) -> [B, dim].
+
+    take + masked reduce == torch nn.EmbeddingBag(mode=combiner). The
+    Pallas kernel `repro.kernels.embedding_bag` implements the same
+    contract with VMEM-tiled gathers.
+    """
+    mask = (global_ids >= 0)
+    rows = jnp.take(tables, jnp.maximum(global_ids, 0), axis=0)  # [B,nnz,dim]
+    w = mask.astype(rows.dtype)
+    if weights is not None:
+        w = w * weights
+    summed = jnp.einsum("bnd,bn->bd", rows, w)
+    if combiner == "sum":
+        return summed
+    if combiner == "mean":
+        return summed / jnp.maximum(jnp.sum(w, axis=1, keepdims=True), 1.0)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+# ---------------------------------------------------------------------------
+# MLP helper
+# ---------------------------------------------------------------------------
+
+
+def init_mlp_stack(key: jax.Array, dims: Sequence[int], dtype,
+                   prefix: str = "mlp") -> dict:
+    keys = jax.random.split(key, len(dims) - 1)
+    out = {}
+    for i, (k, d_in, d_out) in enumerate(zip(keys, dims[:-1], dims[1:])):
+        out[f"{prefix}{i}"] = {
+            "w": (jax.random.normal(k, (d_in, d_out)) * (2.0 / d_in) ** 0.5).astype(dtype),
+            "b": jnp.zeros((d_out,), dtype),
+        }
+    return out
+
+
+def mlp_apply(params: dict, x: jax.Array, n_layers: int, prefix: str = "mlp",
+              final_relu: bool = False) -> jax.Array:
+    for i in range(n_layers):
+        p = params[f"{prefix}{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n_layers - 1 or final_relu:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _bce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ---------------------------------------------------------------------------
+# DLRM (Naumov et al. 2019, MLPerf config)
+# ---------------------------------------------------------------------------
+
+
+def init_dlrm(key: jax.Array, cfg: RecsysConfig) -> dict:
+    k_t, k_b, k_top = jax.random.split(key, 3)
+    n_emb = cfg.n_sparse + 1  # +1 for the bottom-MLP dense embedding
+    n_interactions = n_emb * (n_emb - 1) // 2
+    top_in = cfg.embed_dim + n_interactions
+    return {
+        "tables": init_tables(k_t, cfg),
+        "bot": init_mlp_stack(k_b, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype, "bot"),
+        "top": init_mlp_stack(k_top, (top_in,) + cfg.top_mlp, cfg.dtype, "top"),
+    }
+
+
+def dlrm_forward(params: dict, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    dense = batch["dense"].astype(cfg.dtype)                   # [B, 13]
+    dense_emb = mlp_apply(params["bot"], dense, len(cfg.bot_mlp), "bot",
+                          final_relu=True)                     # [B, 128]
+    sparse = embedding_lookup(params["tables"], cfg, batch["sparse"])
+    z = jnp.concatenate([dense_emb[:, None, :], sparse.astype(cfg.dtype)], 1)
+    # Pairwise dot interaction (upper triangle, no self terms).
+    zz = jnp.einsum("bnd,bmd->bnm", z, z)
+    n = z.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    inter = zz[:, iu, ju]                                      # [B, n(n-1)/2]
+    top_in = jnp.concatenate([dense_emb, inter], axis=1)
+    return mlp_apply(params["top"], top_in, len(cfg.top_mlp), "top")[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 (Wang et al. 2021) — full-rank cross layers, parallel deep tower
+# ---------------------------------------------------------------------------
+
+
+def init_dcn(key: jax.Array, cfg: RecsysConfig) -> dict:
+    k_t, k_c, k_d, k_f = jax.random.split(key, 4)
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = {}
+    for i, k in enumerate(jax.random.split(k_c, cfg.n_cross_layers)):
+        cross[f"cross{i}"] = {
+            "w": (jax.random.normal(k, (d0, d0)) * d0 ** -0.5).astype(cfg.dtype),
+            "b": jnp.zeros((d0,), cfg.dtype),
+        }
+    return {
+        "tables": init_tables(k_t, cfg),
+        "cross": cross,
+        "deep": init_mlp_stack(k_d, (d0,) + cfg.deep_mlp, cfg.dtype, "deep"),
+        "final": init_mlp_stack(k_f, (d0 + cfg.deep_mlp[-1], 1), cfg.dtype, "final"),
+    }
+
+
+def dcn_forward(params: dict, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    emb = embedding_lookup(params["tables"], cfg, batch["sparse"])
+    x0 = jnp.concatenate(
+        [batch["dense"].astype(cfg.dtype), emb.reshape(emb.shape[0], -1).astype(cfg.dtype)], 1)
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        p = params["cross"][f"cross{i}"]
+        x = x0 * (x @ p["w"] + p["b"]) + x                      # DCN-v2 cross
+    deep = mlp_apply(params["deep"], x0, len(cfg.deep_mlp), "deep",
+                     final_relu=True)
+    out = jnp.concatenate([x, deep], axis=1)
+    return mlp_apply(params["final"], out, 1, "final")[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DeepFM (Guo et al. 2017)
+# ---------------------------------------------------------------------------
+
+
+def init_deepfm(key: jax.Array, cfg: RecsysConfig) -> dict:
+    k_t, k_w, k_d = jax.random.split(key, 3)
+    d_in = cfg.n_sparse * cfg.embed_dim
+    return {
+        "tables": init_tables(k_t, cfg),
+        "fm": {"w1": (jax.random.normal(k_w, (cfg.padded_vocab, 1)) * 0.01
+                      ).astype(cfg.param_dtype)},  # first-order weights
+        "deep": init_mlp_stack(k_d, (d_in,) + cfg.deep_mlp + (1,), cfg.dtype, "deep"),
+    }
+
+
+def deepfm_forward(params: dict, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    offsets = jnp.asarray(cfg.row_offsets)
+    gids = batch["sparse"] + offsets[None, : batch["sparse"].shape[1]]
+    emb = jnp.take(params["tables"], gids, axis=0).astype(cfg.dtype)  # [B,F,d]
+    first = jnp.take(params["fm"]["w1"], gids, axis=0)[..., 0].astype(cfg.dtype)
+    fm1 = jnp.sum(first, axis=1)
+    # Second order: 1/2 ((sum v)^2 - sum v^2), summed over embed dim.
+    sum_v = jnp.sum(emb, axis=1)
+    sum_v2 = jnp.sum(emb * emb, axis=1)
+    fm2 = 0.5 * jnp.sum(sum_v * sum_v - sum_v2, axis=1)
+    deep = mlp_apply(params["deep"], emb.reshape(emb.shape[0], -1),
+                     len(cfg.deep_mlp) + 1, "deep")[:, 0]
+    return fm1 + fm2 + deep
+
+
+# ---------------------------------------------------------------------------
+# DIEN (Zhou et al. 2019) — GRU interest extraction + AUGRU evolution
+# ---------------------------------------------------------------------------
+
+
+def _init_gru(key: jax.Array, d_in: int, d_h: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    s_in, s_h = (1.0 / d_in) ** 0.5, (1.0 / d_h) ** 0.5
+    return {
+        "wx": (jax.random.normal(k1, (d_in, 3 * d_h)) * s_in).astype(dtype),
+        "wh": (jax.random.normal(k2, (d_h, 3 * d_h)) * s_h).astype(dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p: dict, h: jax.Array, x: jax.Array,
+              att: Optional[jax.Array] = None) -> jax.Array:
+    """GRU step; with ``att`` it's AUGRU (attention scales the update gate)."""
+    gx = x @ p["wx"] + p["b"]
+    gh = h @ p["wh"]
+    rx, ux, cx = jnp.split(gx, 3, axis=-1)
+    rh, uh, ch = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    u = jax.nn.sigmoid(ux + uh)
+    c = jnp.tanh(cx + r * ch)  # reset gate scales the hidden contribution
+    if att is not None:
+        u = u * att[:, None]
+    return (1.0 - u) * h + u * c
+
+
+def init_dien(key: jax.Array, cfg: RecsysConfig) -> dict:
+    keys = jax.random.split(key, 6)
+    d_item = 2 * cfg.embed_dim  # item + category embedding concat
+    mlp_in = cfg.gru_dim + d_item + cfg.embed_dim  # interest + target + user
+    return {
+        "tables": init_tables(keys[0], cfg),
+        "gru": _init_gru(keys[1], d_item, cfg.gru_dim, cfg.dtype),
+        "augru": _init_gru(keys[2], cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "att": {"w": (jax.random.normal(keys[3], (cfg.gru_dim, d_item)) *
+                      cfg.gru_dim ** -0.5).astype(cfg.dtype)},
+        "deep": init_mlp_stack(keys[4], (mlp_in,) + cfg.deep_mlp + (1,),
+                               cfg.dtype, "deep"),
+        "proj": {"w": (jax.random.normal(keys[5], (cfg.gru_dim, d_item)) *
+                       cfg.gru_dim ** -0.5).astype(cfg.dtype)},
+    }
+
+
+def _dien_embed(params: dict, cfg: RecsysConfig, batch: dict):
+    """DIEN fields: user_id | target (item, cat) | history [S] (item, cat)."""
+    offsets = cfg.row_offsets
+    user_off, item_off, cat_off = 0, offsets[1], offsets[2]
+    tables = params["tables"]
+    user = jnp.take(tables, batch["user_id"] + user_off, axis=0)
+    t_item = jnp.take(tables, batch["target_item"] + item_off, axis=0)
+    t_cat = jnp.take(tables, batch["target_cat"] + cat_off, axis=0)
+    h_item = jnp.take(tables, batch["hist_items"] + item_off, axis=0)
+    h_cat = jnp.take(tables, batch["hist_cats"] + cat_off, axis=0)
+    target = jnp.concatenate([t_item, t_cat], -1).astype(cfg.dtype)   # [B, 2d]
+    hist = jnp.concatenate([h_item, h_cat], -1).astype(cfg.dtype)     # [B, S, 2d]
+    return user.astype(cfg.dtype), target, hist
+
+
+def dien_interest(params: dict, cfg: RecsysConfig, target: jax.Array,
+                  hist: jax.Array, hist_mask: jax.Array) -> jax.Array:
+    """GRU over history -> attention vs target -> AUGRU. Returns [B, gru_dim]."""
+    b = hist.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    xs = hist.transpose(1, 0, 2)                       # [S, B, 2d]
+    ms = hist_mask.astype(cfg.dtype).T                 # [S, B]
+
+    def gru_step(h, x_m):
+        x, m = x_m
+        h_new = _gru_cell(params["gru"], h, x)
+        h = m[:, None] * h_new + (1 - m[:, None]) * h
+        return h, h
+
+    _, states = jax.lax.scan(gru_step, h0, (xs, ms),
+                             unroll=cfg.scan_unroll)  # [S, B, H]
+
+    # Attention of target on interest states (DIN-style bilinear score).
+    scores = jnp.einsum("sbh,hd,bd->sb", states, params["att"]["w"], target)
+    scores = jnp.where(ms > 0, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=0)               # over time
+
+    def augru_step(h, s_a_m):
+        s, a, m = s_a_m
+        h_new = _gru_cell(params["augru"], h, s, att=a)
+        h = m[:, None] * h_new + (1 - m[:, None]) * h
+        return h, None
+
+    h_final, _ = jax.lax.scan(augru_step, h0, (states, att, ms),
+                              unroll=cfg.scan_unroll)
+    return h_final
+
+
+def dien_forward(params: dict, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    user, target, hist = _dien_embed(params, cfg, batch)
+    interest = dien_interest(params, cfg, target, hist, batch["hist_mask"])
+    x = jnp.concatenate([interest, target, user], axis=-1)
+    return mlp_apply(params["deep"], x, len(cfg.deep_mlp) + 1, "deep")[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Uniform API
+# ---------------------------------------------------------------------------
+
+_INIT = {"dlrm": init_dlrm, "dcn_v2": init_dcn, "deepfm": init_deepfm,
+         "dien": init_dien}
+_FWD = {"dlrm": dlrm_forward, "dcn_v2": dcn_forward, "deepfm": deepfm_forward,
+        "dien": dien_forward}
+
+
+def init_params(key: jax.Array, cfg: RecsysConfig) -> dict:
+    return _INIT[cfg.model](key, cfg)
+
+
+def forward(params: dict, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    return _FWD[cfg.model](params, cfg, batch)
+
+
+def loss(params: dict, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    return _bce(forward(params, cfg, batch), batch["labels"])
+
+
+def user_embedding(params: dict, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    """User-side tower representation for retrieval scoring [B, embed_dim]."""
+    if cfg.model == "dlrm":
+        return mlp_apply(params["bot"], batch["dense"].astype(cfg.dtype),
+                         len(cfg.bot_mlp), "bot", final_relu=True)
+    if cfg.model == "dien":
+        user, target, hist = _dien_embed(params, cfg, batch)
+        interest = dien_interest(params, cfg, target, hist, batch["hist_mask"])
+        return interest @ params["proj"]["w"][:, : cfg.embed_dim]
+    # dcn_v2 / deepfm: mean-pool the user-side field embeddings.
+    emb = embedding_lookup(params["tables"], cfg, batch["sparse"])
+    return jnp.mean(emb.astype(cfg.dtype), axis=1)
+
+
+def retrieval_scores(params: dict, cfg: RecsysConfig, batch: dict,
+                     candidate_ids: jax.Array) -> jax.Array:
+    """Score [B] users against [C] candidate items: one batched matmul.
+
+    candidate_ids are GLOBAL rows into the concatenated table; the gathered
+    [C, dim] block is the candidate tower.
+    """
+    u = user_embedding(params, cfg, batch)                     # [B, d]
+    cand = jnp.take(params["tables"], candidate_ids, axis=0)   # [C, d]
+    cand = shd.logical(cand.astype(cfg.dtype), "candidate", None)
+    d = min(u.shape[-1], cand.shape[-1])
+    scores = u[:, :d] @ cand[:, :d].T                          # [B, C]
+    return shd.logical(scores, "batch", "candidate")

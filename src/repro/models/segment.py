@@ -1,0 +1,64 @@
+"""Segment ops for message passing — the JAX-native sparse substrate.
+
+JAX sparse is BCOO-only, so all GNN/recsys message passing in this repo is
+built from ``jax.ops.segment_sum``/``segment_max`` over edge-index arrays
+(DESIGN §2). Padded edges point at a dummy segment (index = num_segments)
+and are sliced off, keeping everything shape-static for jit/pjit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_max(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data: jax.Array, segment_ids: jax.Array, num_segments: int) -> jax.Array:
+    tot = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones(data.shape[:1], data.dtype), segment_ids, num_segments)
+    return tot / jnp.maximum(cnt, 1.0).reshape((-1,) + (1,) * (data.ndim - 1))
+
+
+def segment_softmax(scores: jax.Array, segment_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Numerically-stable softmax within segments.
+
+    scores: [E, ...] with segment dim leading. Empty segments produce zeros.
+    This is GAT's edge-softmax (SDDMM -> per-destination normalize).
+    """
+    seg_max = segment_max(scores, segment_ids, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = scores - seg_max[segment_ids]
+    exp = jnp.exp(shifted)
+    seg_sum = segment_sum(exp, segment_ids, num_segments)
+    return exp / jnp.maximum(seg_sum[segment_ids], 1e-30)
+
+
+def scatter_mean_by(graph_ids: jax.Array, node_feats: jax.Array,
+                    n_graphs: int) -> jax.Array:
+    """Graph-level readout: mean of node features per graph id."""
+    return segment_mean(node_feats, graph_ids, n_graphs)
+
+
+def pad_edges(src, dst, n_edges_max: int, dummy_segment: int,
+              feats: Optional[jax.Array] = None):
+    """Pad edge arrays to a static size; padded edges hit ``dummy_segment``."""
+    e = src.shape[0]
+    if e > n_edges_max:
+        raise ValueError(f"{e} edges exceed static budget {n_edges_max}")
+    pad = n_edges_max - e
+    src = jnp.pad(src, (0, pad), constant_values=dummy_segment)
+    dst = jnp.pad(dst, (0, pad), constant_values=dummy_segment)
+    if feats is not None:
+        feats = jnp.pad(feats, ((0, pad),) + ((0, 0),) * (feats.ndim - 1))
+        return src, dst, feats
+    return src, dst

@@ -1,0 +1,409 @@
+"""Decoder-only transformer LM family (dense GQA + MoE variants).
+
+Covers the five assigned LM architectures (internlm2-20b, yi-6b, gemma-7b,
+llama4-scout-17b-a16e, arctic-480b) through `LMConfig`. Design points:
+
+* **scan over layers** with stacked params — one layer of HLO regardless of
+  depth; compile time and HLO size stay bounded for the 48-layer dry-runs.
+* **chunked (online-softmax) attention** for long prefill — an XLA-level
+  flash formulation (`attention_impl="chunked"`), so 32k-token prefill never
+  materializes an [Sq, Sk] score matrix. The Pallas kernel
+  (`repro.kernels.flash_attention`) is the TPU fast path for the same math.
+* **sequence-chunked cross-entropy** — logits are produced a chunk at a
+  time under `jax.checkpoint`, so the [B, S, V] tensor (2 TB for gemma's
+  256k vocab at train_4k) never exists.
+* three entry points: `train_loss` (train_4k), `prefill` (prefill_32k),
+  `decode_step` (decode_32k / long_500k).
+
+Sharding is annotated with logical axes via `repro.distributed.sharding`
+so the same model code runs single-host and on the (pod, data, model) mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import flash
+from repro.models import layers as L
+from repro.models.layers import LMConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key: jax.Array, cfg: LMConfig) -> dict:
+    k_attn, k_mlp = jax.random.split(key)
+    p = {
+        "ln_attn": L.init_rms_norm(cfg.d_model, cfg.dtype),
+        "ln_mlp": L.init_rms_norm(cfg.d_model, cfg.dtype),
+        "attn": L.init_attention(k_attn, cfg),
+    }
+    if cfg.moe is None:
+        p["mlp"] = L.init_mlp(k_mlp, cfg)
+    else:
+        p["moe"] = L.init_moe(k_mlp, cfg)
+    return p
+
+
+def init_params(key: jax.Array, cfg: LMConfig) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) *
+                  cfg.d_model ** -0.5).astype(cfg.dtype),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "ln_final": L.init_rms_norm(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.vocab))
+                             * cfg.d_model ** -0.5).astype(cfg.dtype)
+    return params
+
+
+def param_spec(cfg: LMConfig):
+    """ShapeDtypeStruct pytree of params — dry-run stand-in, no allocation."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Attention paths
+# ---------------------------------------------------------------------------
+
+
+def _full_attention(q, k, v, *, causal_offset: int, kv_len: Optional[jax.Array]):
+    sq, sk = q.shape[1], k.shape[1]
+    mask = L.causal_mask(sq, sk, offset=causal_offset)
+    if kv_len is not None:  # decode: only cache positions < kv_len are valid
+        mask = jnp.logical_and(mask, (jnp.arange(sk) < kv_len)[None, None, None, :])
+    return L.gqa_attention(q, k, v, mask)
+
+
+def _chunked_attention(q, k, v, *, causal_offset: int,
+                       kv_len: Optional[jax.Array], block: int = 1024):
+    """Online-softmax attention, scanning KV blocks (XLA flash formulation).
+
+    Never materializes [Sq, Sk]; peak extra memory is one [B, KV, G, Sq,
+    block] score tile. Matches `_full_attention` to fp32 accumulation
+    tolerance (property-tested in tests/test_transformer.py).
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    scale = dh ** -0.5
+    nblocks = -(-sk // block)
+    pad = nblocks * block - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nblocks, block, kv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblocks, block, kv, dh).transpose(1, 0, 2, 3, 4)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, kv, groups, dh)
+    q_pos = jnp.arange(sq) + causal_offset
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, blk_idx = xs
+        key_pos = blk_idx * block + jnp.arange(block)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk.astype(jnp.float32))
+        valid = key_pos[None, :] <= q_pos[:, None]          # causal
+        valid = jnp.logical_and(valid, (key_pos < sk)[None, :])  # padding
+        if kv_len is not None:
+            valid = jnp.logical_and(valid, (key_pos < kv_len)[None, :])
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        m_cur = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kv, groups, sq), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((b, kv, groups, sq), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, kv, groups, sq, dh), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb, vb, jnp.arange(nblocks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention(q, k, v, cfg: LMConfig, *, causal_offset: int = 0,
+              kv_len: Optional[jax.Array] = None, impl: Optional[str] = None):
+    sq, sk = q.shape[1], k.shape[1]
+    if impl is None:
+        impl = cfg.attn_impl
+    if impl is None:
+        if kv_len is None and sq == sk and sq > 1:
+            impl = "flash"        # train / prefill: memory-lean custom VJP
+        elif sq == 1:
+            impl = "full"         # decode: [B,H,1,Sk] scores are cheap and
+                                  # shard over the seq axis (split-KV)
+        else:
+            impl = "chunked"
+    if impl == "flash":
+        block = cfg.flash_block or (1024 if (sk >= 1024 and sk % 1024 == 0)
+                                    else sk)
+        return flash.flash_attention(q, k, v, block)
+    if impl == "chunked":
+        return _chunked_attention(q, k, v, causal_offset=causal_offset, kv_len=kv_len)
+    return _full_attention(q, k, v, causal_offset=causal_offset, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# Decoder layer
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p_attn: dict, x: jax.Array, cfg: LMConfig, positions: jax.Array):
+    b, s, _ = x.shape
+    q = shd.logical(x @ p_attn["wq"], "batch", None, "model")
+    k = shd.logical(x @ p_attn["wk"], "batch", None, "model")
+    v = shd.logical(x @ p_attn["wv"], "batch", None, "model")
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    seq_sharded_training = (shd.spec_for("seq") is not None
+                            and tuple(shd.spec_for("seq")) != (None,))
+    if (cfg.n_heads % shd.mesh_axis_size("model") != 0 and s > 1
+            and seq_sharded_training):
+        # (scoped to TRAIN rules: in serving prefill the same constraint
+        # ballooned arctic multi-pod peak memory 8.3 -> 31 GiB — measured
+        # regression, see §Perf A1 scope note)
+        # §Perf A1: 40/56-head archs don't divide the model axis; left to
+        # itself GSPMD shards the head_dim CONTRACTION of the attention
+        # dots and inserts an all-reduce per flash block (dry-run: 26% of
+        # arctic-480b train collective bytes). Pin sequence sharding for
+        # attention instead — softmax stays local, K/V are all-gathered
+        # once per layer (134 MB vs 2.1 TB/device/step).
+        q = shd.logical(q, "batch", "kv_seq", None, None)
+        k = shd.logical(k, "batch", "kv_seq", None, None)
+        v = shd.logical(v, "batch", "kv_seq", None, None)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def decoder_layer_train(p: dict, x: jax.Array, cfg: LMConfig,
+                        positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence layer (training / prefill). Returns (x, moe_aux)."""
+    h = L.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k, v = _qkv(p["attn"], h, cfg, positions)
+    attn_out = attention(q, k, v, cfg)
+    attn_out = attn_out.reshape(*x.shape[:2], cfg.qkv_dim)
+    x = x + shd.logical(attn_out @ p["attn"]["wo"], "batch", None, None)
+
+    h = L.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.moe is None:
+        y = L.glu_mlp(p["mlp"], h, cfg.activation)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        y, aux = L.moe_mlp(p["moe"], h, cfg)
+    x = shd.logical(x + y, "batch", "seq", None)
+    return x, aux
+
+
+def decoder_layer_decode(p: dict, x: jax.Array, cfg: LMConfig,
+                         cache_k: jax.Array, cache_v: jax.Array,
+                         pos: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token layer against a static-size KV cache.
+
+    cache_k/v: [B, S, KV*Dh]; pos: scalar int32 — write index & mask bound.
+    Returns (x, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    h = L.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(p["attn"], h, cfg, positions)
+    k_flat = k.reshape(b, 1, cfg.kv_dim).astype(cache_k.dtype)
+    v_flat = v.reshape(b, 1, cfg.kv_dim).astype(cache_v.dtype)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_flat, (0, pos, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_flat, (0, pos, 0))
+    # §Perf D1 (refuted) / D3: an in-loop with_sharding_constraint on the
+    # cache did NOT change traffic (GSPMD already kept the split-KV
+    # layout) and risks materializing copies — constraints stay at the
+    # jit boundary only.
+    s = cache_k.shape[1]
+    k_all = cache_k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v_all = cache_v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    attn_out = attention(q, k_all, v_all, cfg, causal_offset=pos,
+                         kv_len=pos + 1, impl=cfg.decode_attn_impl)
+    attn_out = attn_out.reshape(b, 1, cfg.qkv_dim)
+    x = x + attn_out @ p["attn"]["wo"]
+
+    h = L.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.moe is None:
+        y = L.glu_mlp(p["mlp"], h, cfg.activation)
+    else:
+        y, _ = L.moe_mlp(p["moe"], h, cfg)
+    return x + y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Remat policies
+# ---------------------------------------------------------------------------
+
+_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _maybe_remat(fn, cfg: LMConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    policy = _POLICIES[cfg.remat_policy]
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def backbone(params: dict, tokens: jax.Array, cfg: LMConfig) -> tuple[jax.Array, jax.Array]:
+    """Embed + all layers + final norm. tokens [B, S] -> (hidden [B, S, D], aux)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)  # gemma embed scaling
+    x = shd.logical(x, "batch", None, None)
+    positions = jnp.arange(s)
+
+    def layer_fn(carry, p_l):
+        x, aux = carry
+        x, aux_l = decoder_layer_train(p_l, x, cfg, positions)
+        return (x, aux + aux_l), None
+
+    layer_fn = _maybe_remat(layer_fn, cfg)
+    (x, aux), _ = jax.lax.scan(layer_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params["ln_final"], cfg.norm_eps), aux
+
+
+def _head_matrix(params: dict, cfg: LMConfig) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_ce_loss(params: dict, hidden: jax.Array, labels: jax.Array,
+                    cfg: LMConfig) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V].
+
+    Scans sequence chunks; each chunk's logits live only inside a
+    jax.checkpoint region (recomputed in backward).
+    """
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    head = _head_matrix(params, cfg)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(h, lab):
+        logits = (h @ head).astype(jnp.float32)         # [B, C, V]
+        logits = shd.logical(logits, "batch", None, "model")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        valid = lab >= 0
+        return jnp.sum(jnp.where(valid, logz - gold, 0.0)), jnp.sum(valid)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        h, lab = xs
+        l, n = chunk_loss(h, lab)
+        return (tot + l, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def train_loss(params: dict, batch: dict, cfg: LMConfig,
+               aux_weight: float = 0.01) -> jax.Array:
+    """batch = {"tokens": [B,S] int32, "labels": [B,S] int32 (-1 = pad)}."""
+    hidden, aux = backbone(params, batch["tokens"], cfg)
+    loss = chunked_ce_loss(params, hidden, batch["labels"], cfg)
+    return loss + aux_weight * aux
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig) -> tuple[jax.Array, dict]:
+    """Prompt processing: tokens [B, S] -> (last-token logits [B, V], cache).
+
+    Cache layout: {"k"/"v": [L, B, S, KV*Dh]} (flat KV dim — see DESIGN §4:
+    merged KV·Dh always divides the model axis, per-head counts don't).
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    x = shd.logical(x, "batch", None, None)
+    positions = jnp.arange(s)
+
+    def layer_fn(x, p_l):
+        h = L.rms_norm(x, p_l["ln_attn"], cfg.norm_eps)
+        q, k, v = _qkv(p_l["attn"], h, cfg, positions)
+        attn_out = attention(q, k, v, cfg).reshape(b, s, cfg.qkv_dim)
+        x = x + attn_out @ p_l["attn"]["wo"]
+        h = L.rms_norm(x, p_l["ln_mlp"], cfg.norm_eps)
+        if cfg.moe is None:
+            y = L.glu_mlp(p_l["mlp"], h, cfg.activation)
+        else:
+            y, _ = L.moe_mlp(p_l["moe"], h, cfg)
+        kf = shd.logical(k.reshape(b, s, cfg.kv_dim), "batch", "kv_seq", None)
+        vf = shd.logical(v.reshape(b, s, cfg.kv_dim), "batch", "kv_seq", None)
+        return x + y, {"k": kf, "v": vf}
+
+    x, cache = jax.lax.scan(layer_fn, x, params["layers"],
+                            unroll=cfg.scan_unroll)
+    hidden = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = (hidden[:, -1, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    return shd.logical(logits, "batch", "model"), cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: LMConfig) -> tuple[jax.Array, dict]:
+    """One decode step. tokens [B, 1]; pos scalar int32 (current length).
+
+    Returns (logits [B, V], updated cache). Cache: {"k"/"v": [L,B,S,KVD]}.
+    """
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+
+    def layer_fn(x, xs):
+        p_l, ck, cv = xs
+        x, ck, cv = decoder_layer_decode(p_l, x, cfg, ck, cv, pos)
+        return x, {"k": ck, "v": cv}
+
+    x, new_cache = jax.lax.scan(layer_fn, x,
+                                (params["layers"], cache["k"], cache["v"]),
+                                unroll=cfg.scan_unroll)
+    hidden = L.rms_norm(x, params["ln_final"], cfg.norm_eps)
+    logits = (hidden[:, 0, :] @ _head_matrix(params, cfg)).astype(jnp.float32)
+    return shd.logical(logits, "batch", "model"), new_cache
+
+
+def init_cache(cfg: LMConfig, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, seq, cfg.kv_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_spec(cfg: LMConfig, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, seq, cfg.kv_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}

@@ -1,0 +1,2 @@
+"""Serving substrate: multi-tier LM engine, continuous-batching scheduler,
+and the SkewRoute dispatcher that ties retrieval skewness to tier choice."""

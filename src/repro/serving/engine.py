@@ -1,0 +1,94 @@
+"""LM serving engine: prefill + decode against a static KV cache.
+
+One engine per tier (small / medium / large model pool). Jitted step
+functions are cached per (batch, prompt_len) bucket; prompts right-pad to
+the bucket and decode greedily. The same `repro.models.transformer` code
+paths the dry-run lowers at production shapes run here at test scale —
+there is no separate "toy" model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.layers import LMConfig
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 1024) * 1024
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, max_new]
+    prompt_tokens: int
+    generated_tokens: int
+
+
+class LMEngine:
+    def __init__(self, cfg: LMConfig, params, max_len: int = 2048):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+
+    @functools.lru_cache(maxsize=32)
+    def _prefill_fn(self, b: int, s: int):
+        cfg = self.cfg
+
+        def run(params, tokens):
+            logits, cache = tfm.prefill(params, tokens, cfg)
+            return logits, cache
+        return jax.jit(run)
+
+    @functools.lru_cache(maxsize=32)
+    def _decode_fn(self, b: int, s: int):
+        cfg = self.cfg
+
+        def run(params, cache, tokens, pos):
+            return tfm.decode_step(params, cache, tokens, pos, cfg)
+        return jax.jit(run, donate_argnums=(1,))
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16,
+                 eos_id: Optional[int] = None) -> GenerationResult:
+        """prompts: [B, S] int32 (right-padded with 0s is fine for the
+        synthetic vocab). Greedy decode ``max_new`` tokens."""
+        b, s = prompts.shape
+        sb = _bucket(s)
+        total = _bucket(min(sb + max_new, self.max_len))
+        toks = np.zeros((b, sb), np.int32)
+        toks[:, :s] = prompts
+        logits, cache = self._prefill_fn(b, sb)(self.params, jnp.asarray(toks))
+        # re-home the prefill cache into a longer decode cache
+        dk = jnp.zeros((self.cfg.n_layers, b, total, self.cfg.kv_dim),
+                       cache["k"].dtype)
+        dv = jnp.zeros_like(dk)
+        cache = {"k": jax.lax.dynamic_update_slice(dk, cache["k"], (0, 0, 0, 0)),
+                 "v": jax.lax.dynamic_update_slice(dv, cache["v"], (0, 0, 0, 0))}
+        decode = self._decode_fn(b, total)
+        out = np.zeros((b, max_new), np.int32)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(max_new):
+            out[:, i] = np.asarray(next_tok)
+            logits, cache = decode(self.params, cache, next_tok[:, None],
+                                   jnp.int32(s + i))
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if eos_id is not None and bool(np.all(out[:, i] == eos_id)):
+                out = out[:, : i + 1]
+                break
+        return GenerationResult(tokens=out, prompt_tokens=b * s,
+                                generated_tokens=out.size)
+
+
+def make_engine(cfg: LMConfig, seed: int = 0, max_len: int = 2048) -> LMEngine:
+    params = tfm.init_params(jax.random.key(seed), cfg)
+    return LMEngine(cfg, params, max_len=max_len)

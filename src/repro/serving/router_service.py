@@ -1,0 +1,107 @@
+"""SkewRoute dispatcher: retrieval scores in, tier assignment out.
+
+This is the paper's Algorithm 1 as a serving component. Per request:
+
+  1. the retrieval stage hands over the top-K triple scores (descending);
+  2. the fused skew-metrics kernel (or its XLA oracle) computes the
+     difficulty metric;
+  3. the threshold router picks a tier; telemetry (tier counts, expected
+     $ cost, mean difficulty) streams to the stats sink;
+  4. the request joins the chosen tier's batch queue
+     (serving/scheduler.py).
+
+Thresholds are *hot-swappable*: the calibrator (core/calibrate.py) can
+re-fit them to a new traffic budget from any unlabeled sample without
+touching the serving path — the training-free property operationalized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import skewness
+from repro.core.calibrate import calibrate_multi_tier
+from repro.core.cost import CostModel
+from repro.core.router import RouterConfig, route_from_difficulty
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    request_id: int
+    tier: int
+    difficulty: float
+    metric: str
+
+
+@dataclasses.dataclass
+class DispatcherStats:
+    n_requests: int = 0
+    tier_counts: dict = dataclasses.field(default_factory=dict)
+    total_cost: float = 0.0
+
+    @property
+    def large_call_ratio(self) -> float:
+        if not self.n_requests:
+            return 0.0
+        top = max(self.tier_counts) if self.tier_counts else 0
+        return self.tier_counts.get(top, 0) / self.n_requests
+
+
+class SkewRouteDispatcher:
+    def __init__(self, router: RouterConfig, tier_names: Sequence[str],
+                 cost_model: Optional[CostModel] = None):
+        if len(tier_names) != router.n_tiers:
+            raise ValueError(f"{router.n_tiers} tiers but "
+                             f"{len(tier_names)} tier names")
+        self.router = router
+        self.tier_names = list(tier_names)
+        self.cost_model = cost_model or CostModel()
+        self.stats = DispatcherStats(tier_counts={i: 0 for i in
+                                                  range(router.n_tiers)})
+        self._lock = threading.Lock()
+        self._next_id = 0
+
+    def dispatch(self, scores_desc: np.ndarray) -> DispatchRecord:
+        """Route one request from its retrieval score vector."""
+        diff = float(skewness.difficulty(
+            jnp.asarray(scores_desc)[None], metric=self.router.metric,
+            p=self.router.cumulative_p)[0])
+        tier = int(route_from_difficulty(
+            jnp.asarray([diff]), jnp.asarray(self.router.thresholds))[0])
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            self.stats.n_requests += 1
+            self.stats.tier_counts[tier] += 1
+            name = self.tier_names[tier]
+            if name in self.cost_model.cost_per_mtok:
+                self.stats.total_cost += self.cost_model.request_cost(name)
+        return DispatchRecord(request_id=rid, tier=tier, difficulty=diff,
+                              metric=self.router.metric)
+
+    def dispatch_batch(self, scores_desc: np.ndarray) -> np.ndarray:
+        """[B, K] -> [B] tier ids (vectorized fast path)."""
+        diff = skewness.difficulty(jnp.asarray(scores_desc),
+                                   metric=self.router.metric,
+                                   p=self.router.cumulative_p)
+        tiers = route_from_difficulty(diff, jnp.asarray(self.router.thresholds))
+        with self._lock:
+            for t in np.asarray(tiers):
+                self.stats.n_requests += 1
+                self.stats.tier_counts[int(t)] += 1
+        return np.asarray(tiers)
+
+    def recalibrate(self, calibration_scores: np.ndarray,
+                    tier_shares: Sequence[float]) -> RouterConfig:
+        """Hot-swap thresholds to hit new traffic shares (training-free)."""
+        new_router = calibrate_multi_tier(
+            jnp.asarray(calibration_scores), tier_shares,
+            metric=self.router.metric, cumulative_p=self.router.cumulative_p)
+        with self._lock:
+            self.router = new_router
+        return new_router

@@ -1,0 +1,129 @@
+"""Continuous-batching scheduler with straggler mitigation.
+
+Per tier: a bounded queue feeds fixed-size decode batches (slots freed as
+sequences finish — continuous batching a la Orca/vLLM, at slot
+granularity). Straggler / failure handling: every request carries a
+deadline; a request stuck on an unhealthy replica past its deadline is
+re-dispatched to the fastest healthy replica of the SAME tier (quality is
+tier-sticky; latency is not). Replica health comes from the fault-
+tolerance heartbeats.
+
+Runs in-process with simulated replica clocks for tests; the dispatch
+logic is the deliverable (the engine call is injected).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    tier: int
+    prompt_len: int
+    max_new: int
+    deadline: float
+    submitted_at: float
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    replica: Optional[int] = None
+    redispatched: int = 0
+
+
+@dataclasses.dataclass
+class Replica:
+    replica_id: int
+    tier: int
+    healthy: bool = True
+    speed: float = 1.0          # tokens/sec multiplier (1.0 = nominal)
+    busy_until: float = 0.0
+
+    def eta(self, now: float, work: float) -> float:
+        return max(self.busy_until, now) + work / max(self.speed, 1e-6)
+
+
+class TierScheduler:
+    """Scheduler for one tier's replica pool."""
+
+    def __init__(self, tier: int, replicas: list[Replica],
+                 batch_slots: int = 8, base_token_time: float = 0.01,
+                 max_redispatch: int = 1):
+        self.tier = tier
+        self.replicas = {r.replica_id: r for r in replicas}
+        self.batch_slots = batch_slots
+        self.base_token_time = base_token_time
+        self.max_redispatch = max_redispatch
+        self.pending: list[tuple[float, int, Request]] = []  # (deadline, id, req)
+        self.inflight: dict[int, Request] = {}
+        self.done: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        heapq.heappush(self.pending, (req.deadline, req.request_id, req))
+
+    def _work(self, req: Request) -> float:
+        return (req.prompt_len * 0.1 + req.max_new) * self.base_token_time
+
+    def _pick_replica(self, now: float, work: float) -> Optional[Replica]:
+        healthy = [r for r in self.replicas.values() if r.healthy]
+        if not healthy:
+            return None
+        return min(healthy, key=lambda r: r.eta(now, work))
+
+    def step(self, now: float) -> list[Request]:
+        """Advance the scheduler clock; returns requests completed by now."""
+        # 1. finish in-flight work
+        completed = []
+        for rid, req in list(self.inflight.items()):
+            rep = self.replicas[req.replica]
+            if rep.healthy and rep.busy_until <= now:
+                req.finished_at = rep.busy_until
+                completed.append(req)
+                self.done.append(req)
+                del self.inflight[rid]
+        # 2. straggler / failure re-dispatch: dead replica always; deadline
+        # overruns at most ``max_redispatch`` times — unbounded yanking
+        # starves long requests forever (measured: 80/120 requests churned
+        # indefinitely in examples/serve_with_routing.py)
+        for rid, req in list(self.inflight.items()):
+            rep = self.replicas[req.replica]
+            stuck = (not rep.healthy) or (
+                now > req.deadline and rep.busy_until > req.deadline
+                and req.redispatched < self.max_redispatch)
+            if stuck:
+                del self.inflight[rid]
+                req.redispatched += 1
+                req.replica = None
+                heapq.heappush(self.pending,
+                               (now, req.request_id, req))  # front of queue
+        # 3. admit pending onto replicas (slot-limited)
+        while self.pending and len(self.inflight) < self.batch_slots:
+            _, _, req = heapq.heappop(self.pending)
+            work = self._work(req)
+            rep = self._pick_replica(now, work)
+            if rep is None:
+                heapq.heappush(self.pending, (req.deadline, req.request_id, req))
+                break
+            req.replica = rep.replica_id
+            req.started_at = max(now, rep.busy_until)
+            rep.busy_until = rep.eta(now, work)
+            self.inflight[req.request_id] = req
+        return completed
+
+    # -- health hooks ---------------------------------------------------------
+
+    def mark_unhealthy(self, replica_id: int) -> None:
+        self.replicas[replica_id].healthy = False
+
+    def mark_healthy(self, replica_id: int, speed: float = 1.0) -> None:
+        rep = self.replicas[replica_id]
+        rep.healthy, rep.speed = True, speed
+
+    def p99_latency(self) -> float:
+        lats = [r.finished_at - r.submitted_at for r in self.done
+                if r.finished_at is not None]
+        return float(np.percentile(lats, 99)) if lats else float("nan")

@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, schedules, train-step factory,
+distributed checkpointing, gradient compression."""

@@ -1,0 +1,257 @@
+"""Optimizers in pure JAX: AdamW, Adafactor, Adagrad, SGD(+momentum).
+
+Why hand-rolled: the container has no optax, and the dry-run needs full
+control over state dtypes/shardings. Optimizer state inherits the param's
+PartitionSpec leaf-for-leaf (fully sharded states — ZeRO-ish by
+construction since params are 2D-sharded over (fsdp, model)).
+
+Adafactor (Shazeer & Stern 2018) is the memory play for `arctic-480b`:
+factored second moments (row+col statistics instead of a full [E,D,F]
+tensor) + optional bf16 momentum — Adam fp32 m+v for 480B params would
+need ~3.8 TB, over the 16 GB/chip budget at 256 chips (DESIGN §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor | adagrad | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999              # adafactor: decay exponent base
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    momentum_dtype: Any = jnp.float32  # bf16 halves momentum memory
+    # Scan the update over the layer-stack dim of scan-stacked params.
+    # Shrinks fp32 update temporaries L-fold but DEFEATS buffer donation
+    # (lax.map outputs are fresh allocations: +params-sized copy; dry-run
+    # measured +7 GiB/device on arctic-480b) — off by default, kept as a
+    # measured §Perf data point.
+    layer_chunked_update: bool = False
+    # schedule
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+
+
+def learning_rate(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac))
+        else:  # linear
+            decay = 1.0 - (1.0 - cfg.min_lr_ratio) * frac
+    return cfg.lr * warm * decay
+
+
+# ---------------------------------------------------------------------------
+# Grad utilities
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    # scale in the grad's own dtype: an f32 round-trip materializes a full
+    # f32 copy of every (sharded) gradient tensor simultaneously
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# State init
+# ---------------------------------------------------------------------------
+
+
+def _factored_dims(shape) -> Optional[tuple[int, int]]:
+    """Adafactor factors the last two dims when both are >= 128-ish."""
+    if len(shape) < 2 or shape[-1] < 2 or shape[-2] < 2:
+        return None
+    return (len(shape) - 2, len(shape) - 1)
+
+
+def init_state(params: Any, cfg: OptimizerConfig) -> dict:
+    if cfg.name == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.momentum_dtype), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+    if cfg.name == "adafactor":
+        def vr(p):
+            f = _factored_dims(p.shape)
+            if f is None:
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros(p.shape[:-1], jnp.float32)       # reduce cols away
+
+        def vc(p):
+            f = _factored_dims(p.shape)
+            if f is None:
+                return jnp.zeros((), jnp.float32)             # unused
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.momentum_dtype), params),
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+        }
+    if cfg.name == "adagrad":
+        return {"acc": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    if cfg.name == "sgd":
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.momentum_dtype), params)}
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Updates
+# ---------------------------------------------------------------------------
+
+
+def state_pspecs(params: Any, param_pspecs: Any, cfg: OptimizerConfig) -> dict:
+    """PartitionSpecs for the optimizer state, derived from param specs.
+
+    m/v mirror the param's spec; Adafactor's factored vr/vc drop the last /
+    second-to-last sharding entry to match their reduced shapes. (Path-regex
+    rules can't do this — a reduced-rank state leaf would mis-bind axes.)
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if cfg.name in ("adamw",):
+        return {"m": param_pspecs, "v": param_pspecs}
+    if cfg.name == "adafactor":
+        def vr_spec(p, s):
+            if _factored_dims(p.shape) is None:
+                return s
+            return P(*tuple(s)[:-1]) if len(tuple(s)) == p.ndim else s
+
+        def vc_spec(p, s):
+            if _factored_dims(p.shape) is None:
+                return P()
+            t = tuple(s)
+            if len(t) == p.ndim:
+                return P(*(t[:-2] + t[-1:]))
+            return s
+        return {
+            "m": param_pspecs,
+            "vr": jax.tree.map(vr_spec, params, param_pspecs),
+            "vc": jax.tree.map(vc_spec, params, param_pspecs),
+        }
+    if cfg.name == "adagrad":
+        return {"acc": param_pspecs}
+    if cfg.name == "sgd":
+        return {"m": param_pspecs}
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def _leafwise(fn, cfg: OptimizerConfig, *arrays):
+    """Apply a per-leaf update, scanning over the layer-stack dim of
+    scan-stacked params (ndim >= 3, shared leading dim) when enabled."""
+    p = arrays[0]
+    if (cfg.layer_chunked_update and p.ndim >= 3
+            and all(a.ndim >= 1 and a.shape[:1] == p.shape[:1] for a in arrays)):
+        return jax.lax.map(lambda xs: fn(*xs), arrays)
+    return fn(*arrays)
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: OptimizerConfig,
+                  step: jax.Array) -> tuple[Any, dict]:
+    lr = learning_rate(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+
+    if cfg.name == "adamw":
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+            mhat = m_new / (1 - cfg.b1 ** t)
+            vhat = v_new / (1 - cfg.b2 ** t)
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m_new.astype(cfg.momentum_dtype), v_new)
+        out = jax.tree.map(lambda *a: _leafwise(upd, cfg, *a), params, grads, state["m"], state["v"])
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        p_new = treedef.unflatten([x[0] for x in flat])
+        m_new = treedef.unflatten([x[1] for x in flat])
+        v_new = treedef.unflatten([x[2] for x in flat])
+        return p_new, {"m": m_new, "v": v_new}
+
+    if cfg.name == "adafactor":
+        decay = 1.0 - t ** -0.8  # standard adafactor beta2 schedule
+
+        def upd(p, g, m, vr, vc):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + 1e-30
+            if _factored_dims(p.shape) is not None:
+                vr_new = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc_new = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                r = vr_new / jnp.maximum(
+                    jnp.mean(vr_new, axis=-1, keepdims=True), 1e-30)
+                precond = jax.lax.rsqrt(r)[..., None] * jax.lax.rsqrt(
+                    jnp.maximum(vc_new, 1e-30))[..., None, :]
+                u = g32 * precond
+            else:
+                vr_new = decay * vr + (1 - decay) * g2
+                vc_new = vc
+                u = g32 * jax.lax.rsqrt(jnp.maximum(vr_new, 1e-30))
+            # RMS-clip the update (adafactor d=1.0)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u
+            delta = m_new + cfg.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                    m_new.astype(cfg.momentum_dtype), vr_new, vc_new)
+
+        out = jax.tree.map(lambda *a: _leafwise(upd, cfg, *a), params, grads, state["m"], state["vr"], state["vc"])
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        return (treedef.unflatten([x[0] for x in flat]),
+                {"m": treedef.unflatten([x[1] for x in flat]),
+                 "vr": treedef.unflatten([x[2] for x in flat]),
+                 "vc": treedef.unflatten([x[3] for x in flat])})
+
+    if cfg.name == "adagrad":
+        def upd(p, g, acc):
+            g32 = g.astype(jnp.float32)
+            acc_new = acc + g32 * g32
+            delta = g32 / (jnp.sqrt(acc_new) + cfg.eps)
+            return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), acc_new)
+        out = jax.tree.map(lambda *a: _leafwise(upd, cfg, *a), params, grads, state["acc"])
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        return (treedef.unflatten([x[0] for x in flat]),
+                {"acc": treedef.unflatten([x[1] for x in flat])})
+
+    if cfg.name == "sgd":
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            m_new = cfg.b1 * m.astype(jnp.float32) + g32
+            return ((p.astype(jnp.float32) - lr * m_new).astype(p.dtype),
+                    m_new.astype(cfg.momentum_dtype))
+        out = jax.tree.map(lambda *a: _leafwise(upd, cfg, *a), params, grads, state["m"])
+        flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        return (treedef.unflatten([x[0] for x in flat]),
+                {"m": treedef.unflatten([x[1] for x in flat])})
+
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

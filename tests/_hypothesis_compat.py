@@ -1,0 +1,114 @@
+"""Property-based testing shim.
+
+Uses real `hypothesis` when installed; otherwise provides a functional
+subset (seeded exhaustive-ish sampling with shrink-free reporting) so the
+property tests still run in this offline container. Strategies cover what
+the suite needs: integers, floats, sampled_from, lists, and numpy arrays.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - prefer the real library when available
+    from hypothesis import HealthCheck
+    from hypothesis import given as _hyp_given
+    from hypothesis import settings as settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+
+    def given(*args, **kwargs):
+        """hypothesis.given with jit-friendly settings (no deadline —
+        first examples pay XLA compilation)."""
+        def deco(f):
+            return settings(deadline=None, max_examples=15,
+                            suppress_health_check=list(HealthCheck))(
+                _hyp_given(*args, **kwargs)(f))
+        return deco
+except ImportError:  # offline fallback
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import itertools
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred, max_tries: int = 100):
+            def draw(rng):
+                for _ in range(max_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate too strict")
+            return _Strategy(draw)
+
+    class st:  # noqa: N801 - mimic hypothesis.strategies namespace
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=-1e3, max_value=1e3, allow_nan=False,
+                   allow_infinity=False, width=64):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=8):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def arrays(shape_strategy, lo=-3.0, hi=3.0, dtype="float32"):
+            def draw(rng):
+                shape = shape_strategy.draw(rng) if hasattr(
+                    shape_strategy, "draw") else shape_strategy
+                return rng.uniform(lo, hi, shape).astype(dtype)
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.draw(rng)
+                                               for s in strategies))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def settings(**_kwargs):  # noqa: D401 - no-op decorator factory
+        def deco(f):
+            return f
+        return deco
+
+    def given(*strategies, n_examples: int = 12, **kw_strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                for i in range(n_examples):
+                    rng = np.random.default_rng(1000 + i)
+                    drawn = [s.draw(rng) for s in strategies]
+                    kdrawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    try:
+                        f(*args, *drawn, **kdrawn, **kwargs)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"property failed on example {i}: args={drawn} "
+                            f"kwargs={kdrawn}: {e}") from e
+            return wrapper
+        return deco

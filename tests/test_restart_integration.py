@@ -1,0 +1,80 @@
+"""Fault-tolerance integration: killing and restoring training mid-run
+reproduces the uninterrupted loss trajectory EXACTLY (checkpoint + data
+pipeline determinism together), and the serving engine generates
+identical tokens across engine instances with the same weights."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _mk(cfg_dtype=jnp.float32):
+    from repro.models import transformer as T
+    from repro.models.layers import LMConfig
+    from repro.training import optimizer as opt_lib, train_loop
+    cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                   head_dim=16, d_ff=64, vocab=128, dtype=cfg_dtype,
+                   loss_chunk=8)
+    opt_cfg = opt_lib.OptimizerConfig(name="adamw", lr=1e-3, warmup_steps=2,
+                                      total_steps=50)
+    params = T.init_params(jax.random.key(0), cfg)
+    state = train_loop.init_train_state(params, opt_cfg)
+    step = jax.jit(train_loop.make_train_step(
+        lambda p, b: T.train_loss(p, b, cfg), opt_cfg))
+    return cfg, state, step
+
+
+def test_restart_reproduces_trajectory(tmp_path):
+    from repro.data.pipeline import ShardedStream, lm_batch_factory
+    from repro.training.checkpoint import CheckpointManager
+
+    cfg, state, step = _mk()
+    factory = lm_batch_factory(4, 16, cfg.vocab)
+
+    # uninterrupted 8-step run
+    losses_ref = []
+    s = state
+    stream = ShardedStream(factory, seed=7)
+    for _ in range(8):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        s, m = step(s, batch)
+        losses_ref.append(float(m["loss"]))
+
+    # run 4 steps, checkpoint, "crash", restore, resume from the stream step
+    mgr = CheckpointManager(tmp_path)
+    s = state
+    stream = ShardedStream(factory, seed=7)
+    for _ in range(4):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        s, m = step(s, batch)
+    mgr.save(4, s)
+    del s                                             # crash
+    _, fresh_state, step2 = _mk()                     # new process state
+    s2 = mgr.restore(fresh_state)
+    assert int(np.asarray(s2["step"])) == 4
+    stream2 = ShardedStream(factory, seed=7, start_step=4)
+    losses_resumed = []
+    for _ in range(4):
+        batch = {k: jnp.asarray(v) for k, v in next(stream2).items()}
+        s2, m = step2(s2, batch)
+        losses_resumed.append(float(m["loss"]))
+    np.testing.assert_allclose(losses_resumed, losses_ref[4:], rtol=1e-6)
+
+
+def test_engine_generation_deterministic():
+    from repro.models.layers import LMConfig
+    from repro.serving.engine import LMEngine
+    from repro.models import transformer as T
+    cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                   head_dim=16, d_ff=64, vocab=128, dtype=jnp.float32)
+    params = T.init_params(jax.random.key(3), cfg)
+    prompts = np.asarray([[5, 9, 2, 7], [1, 1, 4, 8]], np.int32)
+    out1 = LMEngine(cfg, params).generate(prompts, max_new=6)
+    out2 = LMEngine(cfg, params).generate(prompts, max_new=6)
+    assert out1.tokens.shape == (2, 6)
+    np.testing.assert_array_equal(out1.tokens, out2.tokens)
+    # greedy decode must match argmax of a fresh prefill for token 1
+    logits, _ = T.prefill(params, jnp.asarray(np.pad(prompts, ((0, 0), (0, 12)))), cfg)
+    # (engine pads to bucket 16 as well)
+    np.testing.assert_array_equal(out1.tokens[:, 0],
+                                  np.argmax(np.asarray(logits), -1))

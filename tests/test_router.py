@@ -1,0 +1,52 @@
+"""Router + calibration tests (Algorithm 1 + the training-free property)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (RouterConfig, calibrate_multi_tier,
+                        calibrate_threshold, route, route_from_difficulty)
+from tests._hypothesis_compat import given, st
+
+
+def test_router_config_validation():
+    with pytest.raises(ValueError):
+        RouterConfig(metric="nope")
+    with pytest.raises(ValueError):
+        RouterConfig(thresholds=(2.0, 1.0))
+    assert RouterConfig(thresholds=(1.0, 2.0)).n_tiers == 3
+
+
+@given(st.lists(st.floats(-5, 5), min_size=2, max_size=20),
+       st.floats(-4, 4))
+def test_threshold_monotonicity(diffs, theta):
+    """Higher difficulty never routes to a smaller tier."""
+    d = jnp.asarray(sorted(diffs), jnp.float32)
+    tiers = np.asarray(route_from_difficulty(d, jnp.asarray([theta])))
+    assert (np.diff(tiers) >= 0).all()
+
+
+@given(st.integers(0, 500))
+def test_calibration_hits_budget(seed):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.uniform(0.01, 1, (200, 50)).astype(np.float32))
+    for target in [0.2, 0.5, 0.8]:
+        theta = calibrate_threshold(scores, target, metric="entropy")
+        cfg = RouterConfig(metric="entropy", thresholds=(theta,))
+        ratio = float(jnp.mean(route(scores, cfg) > 0))
+        assert abs(ratio - target) < 0.08, (target, ratio)
+
+
+def test_multi_tier_calibration_shares():
+    rng = np.random.default_rng(0)
+    scores = jnp.asarray(rng.uniform(0.01, 1, (300, 50)).astype(np.float32))
+    cfg = calibrate_multi_tier(scores, [0.5, 0.3, 0.2], metric="gini")
+    tiers = np.asarray(route(scores, cfg))
+    shares = [(tiers == t).mean() for t in range(3)]
+    np.testing.assert_allclose(shares, [0.5, 0.3, 0.2], atol=0.08)
+
+
+def test_tier_boundaries_exact():
+    d = jnp.asarray([0.0, 1.0, 2.0, 3.0])
+    tiers = route_from_difficulty(d, jnp.asarray([1.0, 2.0]))
+    assert list(np.asarray(tiers)) == [0, 0, 1, 2]  # <= threshold -> lower

@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests of the paper's system (mini-scale)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="module")
+def kgqa():
+    from repro.retrieval import scorer as sc, synthetic
+    data = synthetic.make_dataset("cwq", n_queries=150, n_entities=4000,
+                                  seed=3)
+    cfg = sc.ScorerConfig(lr=2e-3)
+    params = sc.train_scorer(data, cfg, n_steps=150, seed=3)
+    records = []
+    for q in data.queries:
+        edges, probs = sc.retrieve(params, data.kg, data.entity_emb,
+                                   data.relation_emb, q, cfg)
+        if len(probs) >= 10:
+            gold = next((i for i, e in enumerate(edges)
+                         if e in q.gold_edges), None)
+            records.append((q.hops, probs, gold))
+    return records
+
+
+def test_skew_correlates_with_difficulty(kgqa):
+    """Paper §3.2: multi-hop (difficult) queries -> lower skew."""
+    from repro.core import skewness
+    easy = [p for h, p, _ in kgqa if h == 1]
+    hard = [p for h, p, _ in kgqa if h >= 3]
+    assert len(easy) > 5 and len(hard) > 3
+    area = lambda ps: np.mean([float(skewness.area_metric(
+        jnp.asarray(p)[None])[0]) for p in ps])
+    assert area(hard) > 1.5 * area(easy)
+
+
+def test_retrieval_quality(kgqa):
+    """The trained scorer puts the gold edge near the top (paper A.3.3)."""
+    ranks = [g for _, _, g in kgqa if g is not None]
+    assert len(ranks) / len(kgqa) > 0.8          # recall@K
+    assert np.mean(ranks) < 10                    # near the head
+
+
+def test_routing_beats_random_end_to_end(kgqa):
+    """Paper Figs 5/6 qualitative claim at mini scale."""
+    from repro.core import skewness
+    hops = np.asarray([h for h, _, _ in kgqa])
+    pads = np.stack([np.pad(p, (0, 100 - len(p))) for _, p, _ in kgqa])
+    diff = np.asarray(skewness.difficulty_entropy(jnp.asarray(pads)))
+    # synthetic quality: small fails multi-hop, large doesn't
+    qs = np.where(hops == 1, 0.8, 0.35)
+    ql = np.full_like(qs, 0.75)
+    order = np.argsort(-diff)
+    n = len(diff)
+    rng = np.random.default_rng(0)
+    for frac in [0.3, 0.5]:
+        cut = int(frac * n)
+        sel = np.zeros(n, bool)
+        sel[order[:cut]] = True
+        routed = np.where(sel, ql, qs).mean()
+        rand = np.mean([np.where(
+            np.isin(np.arange(n), rng.permutation(n)[:cut]), ql, qs).mean()
+            for _ in range(20)])
+        assert routed > rand, (frac, routed, rand)
+
+
+def test_dispatcher_integration(kgqa):
+    from repro.core import RouterConfig, calibrate_threshold
+    from repro.serving.router_service import SkewRouteDispatcher
+    pads = np.stack([np.pad(p, (0, 100 - len(p))) for _, p, _ in kgqa])
+    theta = calibrate_threshold(jnp.asarray(pads[:60]), 0.3, "gini")
+    d = SkewRouteDispatcher(RouterConfig(metric="gini", thresholds=(theta,)),
+                            ["qwen7b", "qwen72b"])
+    tiers = d.dispatch_batch(pads[60:])
+    ratio = (tiers == 1).mean()
+    assert 0.1 < ratio < 0.55
+    # hot recalibration shifts the mix
+    d.recalibrate(pads[:60], [0.2, 0.8])
+    tiers2 = d.dispatch_batch(pads[60:])
+    assert (tiers2 == 1).mean() > ratio
