@@ -1,0 +1,153 @@
+"""Routing fast-path benchmark: per-request XLA oracle vs fused batched
+kernel dispatch.
+
+The paper's pitch is that routing costs ~0.001x of a learned router; this
+bench pins the serving-side realization. Two paths over identical traffic:
+
+  oracle/per-request : the seed serving path — one `skewness.difficulty`
+                       jit call + threshold compare PER REQUEST.
+  kernel/batched     : `core.router.route_all_metrics` — ONE fused Pallas
+                       pass (interpret mode off-TPU) for the whole batch,
+                       all four metrics, column-select + compare.
+
+Sweeps B in {1, 64, 1024} x K in {50, 100, 200} (``--smoke``: a 30-second
+subset) and prints ``name,value,derived`` CSV rows like benchmarks/run.py.
+``--out`` appends the rows to a CSV for the perf trajectory across PRs.
+
+Acceptance gate (asserted when the full grid runs): batched-kernel
+dispatch throughput >= 5x the per-request oracle at B=1024, K=100.
+
+  PYTHONPATH=src python -m benchmarks.routing_fastpath_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import skewness
+from repro.core.router import (RouterConfig, route_all_metrics,
+                               route_from_difficulty)
+
+FULL_GRID = {"B": (1, 64, 1024), "K": (50, 100, 200)}
+SMOKE_GRID = {"B": (1, 64), "K": (50,)}
+GATE_SHAPE = (1024, 100)  # B, K of the acceptance assertion
+GATE_SPEEDUP = 5.0
+
+
+def _desc_scores(rng, b, k) -> np.ndarray:
+    return np.sort(rng.uniform(0.01, 1, (b, k)).astype(np.float32),
+                   axis=1)[:, ::-1].copy()
+
+
+def _time_best(fn, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_shape(b: int, k: int, config: RouterConfig,
+                iters: int = 3, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    scores = _desc_scores(rng, b, k)
+    thresholds = jnp.asarray(config.thresholds)
+
+    # -- per-request oracle path (seed dispatch loop) ------------------------
+    rows = [jnp.asarray(scores[i][None]) for i in range(b)]
+
+    def per_request():
+        out = []
+        for row in rows:
+            diff = skewness.difficulty(row, metric=config.metric,
+                                       p=config.cumulative_p)
+            out.append(route_from_difficulty(diff, thresholds))
+        jax.block_until_ready(out)
+        return out
+
+    # -- fused batched kernel path -------------------------------------------
+    batch = jnp.asarray(scores)
+
+    def batched():
+        res = route_all_metrics(batch, config)
+        jax.block_until_ready(res.tiers)
+        return res
+
+    oracle_tiers = np.concatenate([np.asarray(t) for t in per_request()])
+    kernel_tiers = np.asarray(batched().tiers)  # also warms both jits
+    if not np.array_equal(oracle_tiers, kernel_tiers):
+        raise AssertionError(f"path disagreement at B={b} K={k}")
+
+    t_oracle = _time_best(per_request, iters)
+    t_kernel = _time_best(batched, iters)
+    return {
+        "B": b, "K": k,
+        "oracle_s": t_oracle, "kernel_s": t_kernel,
+        "oracle_qps": b / t_oracle, "kernel_qps": b / t_kernel,
+        "speedup": t_oracle / t_kernel,
+    }
+
+
+def run(grid: dict, iters: int = 3,
+        metric: str = "entropy") -> tuple[list[tuple], dict]:
+    """Returns (csv_rows, results keyed by (B, K))."""
+    config = RouterConfig(metric=metric, thresholds=(5.0,))
+    rows: list[tuple] = []
+    results: dict = {}
+    for k in grid["K"]:
+        for b in grid["B"]:
+            r = bench_shape(b, k, config, iters=iters)
+            results[(b, k)] = r
+            tag = f"fastpath/B{b}_K{k}"
+            rows.append((f"{tag}/oracle_qps", round(r["oracle_qps"], 1),
+                         "per-request XLA oracle dispatch"))
+            rows.append((f"{tag}/kernel_qps", round(r["kernel_qps"], 1),
+                         "fused batched kernel dispatch"))
+            rows.append((f"{tag}/speedup", round(r["speedup"], 2),
+                         "kernel_qps / oracle_qps"))
+    return rows, results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (no acceptance gate)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--metric", default="entropy",
+                    choices=["area", "cumulative", "entropy", "gini"])
+    ap.add_argument("--out", default=None,
+                    help="append CSV rows to this file (perf trajectory)")
+    args = ap.parse_args()
+
+    grid = SMOKE_GRID if args.smoke else FULL_GRID
+    t0 = time.monotonic()
+    rows, results = run(grid, iters=args.iters, metric=args.metric)
+    rows.append(("fastpath/wall_s", round(time.monotonic() - t0, 1),
+                 "total bench wall time"))
+
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+    if args.out:
+        with open(args.out, "a") as f:
+            for name, value, derived in rows:
+                f.write(f"{name},{value},{derived}\n")
+
+    if GATE_SHAPE in results:
+        speedup = results[GATE_SHAPE]["speedup"]
+        assert speedup >= GATE_SPEEDUP, (
+            f"batched kernel dispatch only {speedup:.1f}x the per-request "
+            f"oracle at B={GATE_SHAPE[0]} K={GATE_SHAPE[1]} "
+            f"(acceptance: >= {GATE_SPEEDUP}x)")
+        print(f"ACCEPT: batched fast path {speedup:.1f}x per-request oracle "
+              f"at B={GATE_SHAPE[0]}, K={GATE_SHAPE[1]}")
+
+
+if __name__ == "__main__":
+    main()

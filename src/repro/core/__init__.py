@@ -17,11 +17,19 @@ from repro.core.skewness import (  # noqa: F401
     normalize_prob,
 )
 from repro.core.router import (  # noqa: F401
+    RouteBatchResult,
     RouterConfig,
     RoutingStats,
+    difficulty_from_metrics,
     route,
+    route_all_metrics,
     route_binary,
     route_from_difficulty,
+)
+from repro.core.streaming_calibrate import (  # noqa: F401
+    DriftEvent,
+    SlidingWindow,
+    StreamingCalibrator,
 )
 from repro.core.calibrate import (  # noqa: F401
     SweepPoint,

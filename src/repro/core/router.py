@@ -64,6 +64,52 @@ def route(scores: jax.Array, config: RouterConfig,
     return route_from_difficulty(diff, jnp.asarray(config.thresholds))
 
 
+@dataclasses.dataclass(frozen=True)
+class RouteBatchResult:
+    """Everything the fused fast path produces for one batch.
+
+    ``metrics`` keeps ALL four metric columns (kernel order — see
+    ``repro.kernels.skew_metrics.ops.METRIC_COLUMNS``) so telemetry and
+    the streaming calibrator get the full picture for free.
+    """
+
+    tiers: jax.Array        # [B] int32
+    difficulty: jax.Array   # [B] float32, larger = harder
+    metrics: jax.Array      # [B, 4] float32 raw metric values
+
+
+def difficulty_from_metrics(metrics: jax.Array, metric: str) -> jax.Array:
+    """Column-select one metric from the fused [B, 4] output and orient it
+    as a difficulty score (larger = harder). Gini is the only metric where
+    high skew = high value, so it is negated (see skewness registry)."""
+    from repro.kernels.skew_metrics.kernel import METRIC_COLUMNS
+    try:
+        col = METRIC_COLUMNS.index(metric)
+    except ValueError:
+        raise ValueError(f"unknown metric {metric!r}; "
+                         f"choose from {sorted(METRIC_COLUMNS)}") from None
+    sign = -1.0 if metric == "gini" else 1.0
+    return sign * metrics[..., col]
+
+
+def route_all_metrics(scores_desc: jax.Array, config: RouterConfig,
+                      n_valid: Optional[jax.Array] = None,
+                      interpret: Optional[bool] = None) -> RouteBatchResult:
+    """Batched fast path: ONE fused Pallas pass (interpret-mode on CPU)
+    computes all four skew metrics; tier choice is a column select plus a
+    threshold compare — no per-metric recompiles, no per-request calls.
+
+    ``scores_desc``: [B, K] descending-sorted top-K retrieval scores.
+    ``n_valid``: optional [B] valid-prefix counts for ragged retrieval.
+    """
+    from repro.kernels.skew_metrics import ops as skew_ops
+    metrics = skew_ops.skew_metrics(scores_desc, p_cdf=config.cumulative_p,
+                                    n_valid=n_valid, interpret=interpret)
+    diff = difficulty_from_metrics(metrics, config.metric)
+    tiers = route_from_difficulty(diff, jnp.asarray(config.thresholds))
+    return RouteBatchResult(tiers=tiers, difficulty=diff, metrics=metrics)
+
+
 def route_from_difficulty(difficulty: jax.Array,
                           thresholds: jax.Array) -> jax.Array:
     """Bucket difficulty scores by ascending thresholds -> int32 tier ids.

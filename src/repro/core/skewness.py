@@ -94,10 +94,13 @@ def cumulative_k(
     probs = jnp.sort(probs, axis=-1)[..., ::-1]
     cdf = jnp.cumsum(probs, axis=-1)
     reached = cdf >= (p - _EPS)
-    # First index where the CDF crosses p; if never (degenerate), K.
+    # First index where the CDF crosses p; if never (degenerate, e.g. an
+    # all-zero score vector), the number of VALID contexts — returning the
+    # padded width K would overstate difficulty for ragged rows.
     k = jnp.argmax(reached, axis=-1) + 1
     any_reached = jnp.any(reached, axis=-1)
-    return jnp.where(any_reached, k, scores.shape[-1]).astype(jnp.float32)
+    return jnp.where(any_reached, k,
+                     _valid_count(scores, mask)).astype(jnp.float32)
 
 
 def entropy_metric(scores: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:

@@ -1,0 +1,183 @@
+"""Streaming, drift-aware threshold calibration (training-free, online).
+
+``core.calibrate`` fits thresholds from a static unlabeled sample; serving
+needs the inverse problem solved CONTINUOUSLY: live traffic drifts away
+from the calibration distribution (RAGRouter and cost-aware-routing both
+document the quality cliff), and the tier mix silently walks off the
+budget. Because the SkewRoute router is a pure quantile rule, the fix
+stays training-free: keep a sliding window of recent difficulty samples,
+watch the OBSERVED tier shares under the current thresholds, and when
+they drift past a tolerance re-fit the thresholds from window quantiles
+and hot-swap the (frozen, trivially swappable) ``RouterConfig``.
+
+The window is an exact ring buffer — at serving batch sizes the O(W log W)
+quantile over a few-thousand-float window is noise next to a single LLM
+token, and exactness keeps the convergence guarantee of
+``calibrate_threshold`` (same quantile, same data ⇒ same theta).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.router import RouterConfig
+
+
+class SlidingWindow:
+    """Fixed-capacity ring buffer over a scalar stream (float32).
+
+    Keeps the most recent ``capacity`` samples; O(1) amortized pushes,
+    exact quantiles over the current contents.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 2:
+            raise ValueError(f"window capacity must be >= 2, got {capacity}")
+        self.capacity = capacity
+        self._buf = np.empty(capacity, np.float32)
+        self._n = 0          # total samples ever pushed
+        self._head = 0       # next write position
+
+    def __len__(self) -> int:
+        return min(self._n, self.capacity)
+
+    @property
+    def total_seen(self) -> int:
+        return self._n
+
+    def push(self, values: np.ndarray) -> None:
+        v = np.asarray(values, np.float32).ravel()
+        if v.size >= self.capacity:       # batch alone fills the window
+            self._buf[:] = v[-self.capacity:]
+            self._head = 0
+        else:
+            end = self._head + v.size
+            if end <= self.capacity:
+                self._buf[self._head:end] = v
+            else:
+                split = self.capacity - self._head
+                self._buf[self._head:] = v[:split]
+                self._buf[:end - self.capacity] = v[split:]
+            self._head = end % self.capacity
+        self._n += v.size
+
+    def values(self) -> np.ndarray:
+        """Current window contents (order-free copy)."""
+        return self._buf[:len(self)].copy()
+
+    def quantile(self, q) -> np.ndarray:
+        if len(self) == 0:
+            raise ValueError("empty window has no quantiles")
+        return np.quantile(self._buf[:len(self)], q)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One hot-swap: what was observed and what the thresholds became."""
+
+    at_sample: int                       # total_seen when the swap fired
+    observed_shares: tuple[float, ...]
+    target_shares: tuple[float, ...]
+    old_thresholds: tuple[float, ...]
+    new_thresholds: tuple[float, ...]
+
+    @property
+    def max_drift(self) -> float:
+        return max(abs(o - t) for o, t in
+                   zip(self.observed_shares, self.target_shares))
+
+
+class StreamingCalibrator:
+    """Sliding-window quantile calibrator with drift-triggered hot-swap.
+
+    Feed per-batch difficulty samples via :meth:`observe`; it returns a
+    fresh :class:`RouterConfig` whenever the observed tier shares under
+    the CURRENT thresholds drift more than ``tolerance`` (L-inf over
+    shares) from ``target_shares`` — and ``None`` otherwise. The caller
+    (the dispatcher) owns the swap; the calibrator owns the statistics.
+
+    Knobs:
+      window:       samples of history the quantiles see (drift response
+                    time ~ window / batch_rate).
+      min_samples:  don't judge drift before the window has this much.
+      tolerance:    max |observed - target| share before refitting.
+      cooldown:     samples to wait after a swap before the next one
+                    (prevents threshold flapping while the window still
+                    mixes pre- and post-drift traffic).
+    """
+
+    def __init__(self, config: RouterConfig,
+                 target_shares: Sequence[float],
+                 window: int = 4096, min_samples: int = 256,
+                 tolerance: float = 0.05,
+                 cooldown: Optional[int] = None):
+        shares = tuple(float(s) for s in target_shares)
+        if len(shares) != config.n_tiers:
+            raise ValueError(f"{config.n_tiers} tiers but "
+                             f"{len(shares)} target shares")
+        if any(s < 0 for s in shares) or abs(sum(shares) - 1.0) > 1e-6:
+            raise ValueError(f"target shares must be >= 0 and sum to 1, "
+                             f"got {shares}")
+        if not 0.0 < tolerance < 1.0:
+            raise ValueError(f"tolerance must be in (0,1), got {tolerance}")
+        self.config = config
+        self.target_shares = shares
+        self.tolerance = tolerance
+        self.min_samples = max(int(min_samples), 2)
+        self.cooldown = int(cooldown) if cooldown is not None else max(
+            self.min_samples, window // 4)
+        self.window = SlidingWindow(window)
+        self.events: list[DriftEvent] = []
+        self._last_swap_at = -self.cooldown  # allow an immediate first swap
+
+    # -- statistics -----------------------------------------------------------
+
+    def observed_shares(self) -> tuple[float, ...]:
+        """Empirical tier shares of the window under CURRENT thresholds."""
+        d = self.window.values()
+        ts = np.asarray(self.config.thresholds)
+        tiers = np.sum(d[:, None] > ts[None, :], axis=1)
+        n = max(d.size, 1)
+        return tuple(float(np.sum(tiers == t)) / n
+                     for t in range(self.config.n_tiers))
+
+    def fit_config(self) -> RouterConfig:
+        """Thresholds hitting ``target_shares`` on the current window —
+        the streaming analogue of ``calibrate.calibrate_multi_tier``."""
+        cuts = np.cumsum(self.target_shares)[:-1]
+        ts = [float(q) for q in self.window.quantile(cuts)]
+        for i in range(1, len(ts)):     # ties can collapse; keep ascending
+            ts[i] = max(ts[i], ts[i - 1])
+        return dataclasses.replace(self.config, thresholds=tuple(ts))
+
+    # -- the streaming step ---------------------------------------------------
+
+    def observe(self, difficulty: np.ndarray) -> Optional[RouterConfig]:
+        """Absorb one batch of difficulty samples; maybe emit new config."""
+        self.window.push(np.asarray(difficulty))
+        if len(self.window) < self.min_samples:
+            return None
+        if self.window.total_seen - self._last_swap_at < self.cooldown:
+            return None
+        observed = self.observed_shares()
+        drift = max(abs(o - t)
+                    for o, t in zip(observed, self.target_shares))
+        if drift <= self.tolerance:
+            return None
+        new = self.fit_config()
+        self.events.append(DriftEvent(
+            at_sample=self.window.total_seen,
+            observed_shares=observed,
+            target_shares=self.target_shares,
+            old_thresholds=self.config.thresholds,
+            new_thresholds=new.thresholds))
+        self.config = new
+        self._last_swap_at = self.window.total_seen
+        return new
+
+    @property
+    def n_swaps(self) -> int:
+        return len(self.events)

@@ -81,9 +81,20 @@ def cross_pod_mean_int8(mesh, axis: str = "pod"):
             return jax.tree.map(one, g_tree)
 
         specs = jax.tree.map(lambda _: P(), grads)
-        # check_vma off: the int8 gather+mean provably replicates the
-        # result across the pod axis, but the varying-manual-axes checker
-        # can't see through the quantize/dequantize round trip.
-        return jax.shard_map(body, mesh=mesh, in_specs=(specs,),
-                             out_specs=specs, check_vma=False)(grads)
+        # replication check off: the int8 gather+mean provably replicates
+        # the result across the pod axis, but the varying-manual-axes
+        # checker can't see through the quantize/dequantize round trip.
+        return _shard_map(body, mesh, (specs,), specs)(grads)
     return transform
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    """shard_map across jax versions: ``jax.shard_map(check_vma=...)`` on
+    current jax, ``jax.experimental.shard_map(check_rep=...)`` on 0.4.x."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_experimental
+    return sm_experimental(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)

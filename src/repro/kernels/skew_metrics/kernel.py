@@ -10,11 +10,19 @@ difficulty metrics in ONE pass over a [rows, K] tile:
   col 3  gini          (K+1 - 2 sum (K-i+1) s'_i / sum) / K
 
 The descending order is exploited twice: the CDF needs no sort, and the
-ascending-rank weights for Gini are just reversed descending ranks —
-`repro.core.skewness` (the XLA oracle) sorts twice instead.
+paper's ascending-rank Gini weight (K - i + 1) collapses to (column + 1)
+for descending data — `repro.core.skewness` (the XLA oracle) sorts twice
+instead.
+
+Ragged retrieval is first-class: an optional per-row ``n_valid`` vector
+(matching the oracle's prefix-``mask`` support) rides along as a
+[rows, 1] int32 block; every reduction masks columns >= n_valid and the
+Gini/cumulative normalizers use the per-row count. All four metrics are
+always emitted, so the router's metric choice is a column select — never
+a recompile.
 
 Grid: row tiles; one [rows_tile, K] VMEM block, four VPU reductions, one
-[rows_tile, 4] store. K=100 pads to 128 lanes with -inf-aware masking.
+[rows_tile, 4] store. K=100 pads to 128 lanes with mask-aware reductions.
 """
 
 from __future__ import annotations
@@ -28,12 +36,16 @@ from jax.experimental import pallas as pl
 DEFAULT_ROW_TILE = 8
 _EPS = 1e-12
 
+METRIC_COLUMNS = ("area", "cumulative", "entropy", "gini")
 
-def _skew_kernel(s_ref, o_ref, *, k_valid: int, p_cdf: float):
+
+def _skew_kernel(s_ref, nv_ref, o_ref, *, p_cdf: float):
     s = s_ref[...].astype(jnp.float32)                     # [rows, Kpad]
     rows, kpad = s.shape
+    nv = nv_ref[...]                                       # [rows, 1] int32
+    nvf = nv.astype(jnp.float32)                           # [rows, 1]
     col = jax.lax.broadcasted_iota(jnp.int32, (rows, kpad), 1)
-    valid = col < k_valid
+    valid = col < nv
 
     # min-max normalize (masked)
     s_hi = jnp.max(jnp.where(valid, s, -jnp.inf), axis=1, keepdims=True)
@@ -49,39 +61,55 @@ def _skew_kernel(s_ref, o_ref, *, k_valid: int, p_cdf: float):
     # cumulative-k: scores arrive descending, so CDF = running sum
     cdf = jnp.cumsum(prob, axis=1)
     below = jnp.where(valid, (cdf < p_cdf - _EPS).astype(jnp.float32), 0.0)
-    cum_k = jnp.minimum(jnp.sum(below, axis=1) + 1.0, float(k_valid))
+    cum_k = jnp.minimum(jnp.sum(below, axis=1) + 1.0, nvf[:, 0])
 
-    # entropy (bits)
-    plogp = jnp.where(prob > _EPS, prob * (jnp.log(prob + _EPS) / jnp.log(2.0)),
-                      0.0)
+    # entropy (bits) — jnp.log2 to match the oracle's formulation exactly
+    plogp = jnp.where(prob > _EPS, prob * jnp.log2(prob + _EPS), 0.0)
     entropy = -jnp.sum(plogp, axis=1)
 
-    # gini: ascending rank of column j (descending data) = k_valid - j
-    asc_rank = (k_valid - col).astype(jnp.float32)         # 1-indexed
-    weight = jnp.where(valid, k_valid - asc_rank + 1.0, 0.0)
+    # gini: paper weight (n - asc_rank + 1) over ascending-sorted data is
+    # just (col + 1) for descending-sorted data
+    weight = jnp.where(valid, (col + 1).astype(jnp.float32), 0.0)
     weighted = jnp.sum(weight * shifted, axis=1)
     tot = total[:, 0]
-    gini = (k_valid + 1.0 - 2.0 * weighted / (tot + _EPS)) / k_valid
+    n1 = jnp.maximum(nvf[:, 0], 1.0)
+    gini = (n1 + 1.0 - 2.0 * weighted / (tot + _EPS)) / n1
     gini = jnp.clip(gini, 0.0, 1.0)
 
     o_ref[...] = jnp.stack([area, cum_k, entropy, gini], axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("p_cdf", "row_tile", "interpret"))
-def skew_metrics(scores_desc: jax.Array, p_cdf: float = 0.95,
+@functools.partial(jax.jit,
+                   static_argnames=("p_cdf", "row_tile", "interpret"))
+def skew_metrics(scores_desc: jax.Array,
+                 n_valid: jax.Array | None = None,
+                 p_cdf: float = 0.95,
                  row_tile: int = DEFAULT_ROW_TILE,
                  interpret: bool = False) -> jax.Array:
-    """scores_desc: [B, K] descending-sorted -> [B, 4] (area, k@P, H, gini)."""
+    """[B, K] descending-sorted -> [B, 4] (area, k@P, H, gini).
+
+    ``n_valid``: optional [B] int32 count of valid leading entries per row
+    (ragged retrieval); defaults to K everywhere. Clamped to [1, K]: an
+    empty retrieval (0) is treated as one degenerate entry — the oracle's
+    all-false mask instead reports cumulative_k = 0, so route zero-hit
+    requests before they reach the kernel.
+    """
     b, k = scores_desc.shape
     kpad = -(-k // 128) * 128
     bpad = -(-b // row_tile) * row_tile
     s = jnp.pad(scores_desc, ((0, bpad - b), (0, kpad - k)))
+    if n_valid is None:
+        nv = jnp.full((b,), k, jnp.int32)
+    else:
+        nv = jnp.clip(jnp.asarray(n_valid, jnp.int32), 1, k)
+    nv = jnp.pad(nv, (0, bpad - b), constant_values=1)[:, None]
     out = pl.pallas_call(
-        functools.partial(_skew_kernel, k_valid=k, p_cdf=p_cdf),
+        functools.partial(_skew_kernel, p_cdf=p_cdf),
         grid=(bpad // row_tile,),
-        in_specs=[pl.BlockSpec((row_tile, kpad), lambda i: (i, 0))],
+        in_specs=[pl.BlockSpec((row_tile, kpad), lambda i: (i, 0)),
+                  pl.BlockSpec((row_tile, 1), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((row_tile, 4), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bpad, 4), jnp.float32),
         interpret=interpret,
-    )(s)
+    )(s, nv)
     return out[:b]

@@ -1,18 +1,35 @@
-"""Public wrapper for the fused skew-metrics kernel."""
+"""Public wrapper for the fused skew-metrics kernel.
+
+`skew_metrics` is the serving fast path: one fused pass producing all
+four difficulty metrics, so downstream metric selection is a column
+lookup (``METRIC_COLUMNS.index(name)``) instead of a recompile. On
+non-TPU backends the kernel runs in Pallas interpret mode, which still
+compiles to a single XLA computation under jit — batched dispatch stays
+one device call either way.
+"""
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
 from repro.kernels.skew_metrics import kernel, ref
+from repro.kernels.skew_metrics.kernel import METRIC_COLUMNS  # noqa: F401
 
-METRIC_COLUMNS = ("area", "cumulative", "entropy", "gini")
 
+def skew_metrics(scores_desc, p_cdf: float = 0.95,
+                 n_valid: Optional[jax.Array] = None,
+                 interpret: Optional[bool] = None):
+    """[B, K] descending-sorted (+ optional [B] n_valid) -> [B, 4].
 
-def skew_metrics(scores_desc, p_cdf: float = 0.95):
-    on_tpu = jax.default_backend() == "tpu"
-    return kernel.skew_metrics(scores_desc, p_cdf=p_cdf,
-                               interpret=not on_tpu)
+    ``n_valid`` is clamped to [1, K] (empty rows become one degenerate
+    entry; see kernel docstring)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return kernel.skew_metrics(scores_desc, n_valid=n_valid, p_cdf=p_cdf,
+                               interpret=interpret)
 
 
 skew_metrics_ref = ref.skew_metrics_ref
+mask_from_n_valid = ref.mask_from_n_valid

@@ -2,16 +2,30 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import skewness
 
 
-def skew_metrics_ref(scores_desc, p_cdf: float = 0.95):
-    """[B, K] descending-sorted -> [B, 4] (area, cum_k, entropy, gini)."""
+def mask_from_n_valid(n_valid: jax.Array, k: int) -> jax.Array:
+    """[B] valid-prefix counts -> [B, K] boolean mask (descending top-k
+    output is always a valid prefix)."""
+    return jnp.arange(k)[None, :] < jnp.asarray(n_valid)[:, None]
+
+
+def skew_metrics_ref(scores_desc, p_cdf: float = 0.95,
+                     mask: Optional[jax.Array] = None):
+    """[B, K] descending-sorted -> [B, 4] (area, cum_k, entropy, gini).
+
+    ``mask`` mirrors the oracle's ragged support; the fused kernel's
+    ``n_valid`` is the prefix special case (see ``mask_from_n_valid``).
+    """
     return jnp.stack([
-        skewness.area_metric(scores_desc),
-        skewness.cumulative_k(scores_desc, p_cdf),
-        skewness.entropy_metric(scores_desc),
-        skewness.gini_metric(scores_desc),
+        skewness.area_metric(scores_desc, mask),
+        skewness.cumulative_k(scores_desc, p_cdf, mask),
+        skewness.entropy_metric(scores_desc, mask),
+        skewness.gini_metric(scores_desc, mask),
     ], axis=1)

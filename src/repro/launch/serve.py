@@ -31,7 +31,8 @@ def main() -> None:
     from repro.models.layers import LMConfig
     from repro.retrieval import scorer as sc
     from repro.retrieval import synthetic
-    from repro.serving.engine import make_engine
+    from repro.serving.engine import EngineBank, make_engine
+    from repro.serving.pipeline import ServingPipeline
     from repro.serving.router_service import SkewRouteDispatcher
 
     print("== retrieval stack ==")
@@ -40,47 +41,64 @@ def main() -> None:
     cfg = sc.ScorerConfig(lr=2e-3)
     params = sc.train_scorer(data, cfg, n_steps=150)
 
-    calib = []
+    calib, calib_nv = [], []
     for q in data.queries[: 100]:
         _, probs = sc.retrieve(params, data.kg, data.entity_emb,
                                data.relation_emb, q, cfg)
-        calib.append(np.pad(probs, (0, 100 - len(probs))))
+        calib.append(np.pad(probs[:100], (0, max(0, 100 - len(probs)))))
+        calib_nv.append(min(len(probs), 100))
+    calib_nv = np.asarray(calib_nv, np.int32)
+    # ragged retrieval: calibrate on the same masked metrics dispatch uses
+    calib_mask = np.arange(100)[None, :] < calib_nv[:, None]
     theta = calibrate_threshold(jnp.asarray(np.stack(calib)), args.budget,
-                                args.metric)
+                                args.metric, mask=jnp.asarray(calib_mask))
     dispatcher = SkewRouteDispatcher(
         RouterConfig(metric=args.metric, thresholds=(theta,)),
         ["qwen7b", "qwen72b"])
+    dispatcher.attach_calibrator([1.0 - args.budget, args.budget],
+                                 window=1024, min_samples=64)
     print(f"{args.metric} threshold {theta:.4f} for {args.budget:.0%} budget")
 
     print("== tier engines ==")
-    tiers = [
-        make_engine(LMConfig(name="small-tier", n_layers=2, d_model=64,
-                             n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
-                             vocab=512, dtype=jnp.float32)),
-        make_engine(LMConfig(name="large-tier", n_layers=4, d_model=128,
-                             n_heads=8, n_kv_heads=4, head_dim=16, d_ff=256,
-                             vocab=512, dtype=jnp.float32)),
-    ]
+    bank = EngineBank({
+        0: make_engine(LMConfig(name="small-tier", n_layers=2, d_model=64,
+                                n_heads=4, n_kv_heads=2, head_dim=16,
+                                d_ff=128, vocab=512, dtype=jnp.float32)),
+        1: make_engine(LMConfig(name="large-tier", n_layers=4, d_model=128,
+                                n_heads=8, n_kv_heads=4, head_dim=16,
+                                d_ff=256, vocab=512, dtype=jnp.float32)),
+    }, max_new=8)
+    pipe = ServingPipeline(dispatcher, bank.runners(), micro_batch=8)
 
     t0 = time.monotonic()
-    generated = 0
+    batch_scores, batch_nv, batch_prompts = [], [], []
     for q in data.queries[100: 100 + args.requests]:
         _, probs = sc.retrieve(params, data.kg, data.entity_emb,
                                data.relation_emb, q, cfg)
-        rec = dispatcher.dispatch(probs)
-        prompt = (np.abs(np.frombuffer(q.query_emb.tobytes(), np.uint8)[:16])
-                  .astype(np.int32)[None] % 512)
-        out = tiers[rec.tier].generate(prompt, max_new=8)
-        generated += out.generated_tokens
+        batch_scores.append(np.pad(probs[:100], (0, max(0, 100 - len(probs)))))
+        batch_nv.append(min(len(probs), 100))  # ragged: pad is NOT data
+        batch_prompts.append(
+            np.abs(np.frombuffer(q.query_emb.tobytes(), np.uint8)[:16])
+            .astype(np.int32) % 512)
+        if len(batch_scores) == 16:  # request-batch granularity of dispatch
+            pipe.submit(np.stack(batch_scores), batch_prompts,
+                        n_valid=np.asarray(batch_nv, np.int32))
+            batch_scores, batch_nv, batch_prompts = [], [], []
+    if batch_scores:
+        pipe.submit(np.stack(batch_scores), batch_prompts,
+                    n_valid=np.asarray(batch_nv, np.int32))
+    pipe.flush()
     wall = time.monotonic() - t0
 
+    generated = sum(b.result.generated_tokens for b in pipe.executed)
     s = dispatcher.stats
     from repro.core.cost import CostModel
     cm = CostModel()
     all_large = cm.request_cost("qwen72b") * s.n_requests
     print(f"\nserved {s.n_requests} requests / {generated} tokens in "
-          f"{wall:.1f}s; tier mix {s.tier_counts} "
-          f"(large ratio {s.large_call_ratio:.2f})")
+          f"{wall:.1f}s over {pipe.telemetry.n_microbatches} micro-batches; "
+          f"tier mix {s.tier_counts} (large ratio {s.large_call_ratio:.2f}); "
+          f"{s.n_recalibrations} drift recalibrations")
     print(f"est. cost ${s.total_cost:.4f} vs all-large ${all_large:.4f} "
           f"({100 * (1 - s.total_cost / all_large):.0f}% saved)")
 

@@ -1,2 +1,22 @@
-"""Serving substrate: multi-tier LM engine, continuous-batching scheduler,
-and the SkewRoute dispatcher that ties retrieval skewness to tier choice."""
+"""Serving substrate: multi-tier LM engine bank, continuous-batching
+scheduler with per-tier micro-batch queues, the SkewRoute dispatcher
+running the fused skew-metrics fast path, and the pipeline wiring
+dispatch → queues → engines → streaming recalibration together."""
+
+from repro.serving.pipeline import (  # noqa: F401
+    ExecutedBatch,
+    PipelineTelemetry,
+    ServingPipeline,
+)
+from repro.serving.router_service import (  # noqa: F401
+    BatchDispatchResult,
+    DispatchRecord,
+    DispatcherStats,
+    SkewRouteDispatcher,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    MicroBatchQueue,
+    Replica,
+    Request,
+    TierScheduler,
+)

@@ -19,13 +19,11 @@ import numpy as np
 
 from repro.models import transformer as tfm
 from repro.models.layers import LMConfig
+from repro.serving.scheduler import bucket_size
 
 
 def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024)) -> int:
-    for b in buckets:
-        if n <= b:
-            return b
-    return -(-n // 1024) * 1024
+    return bucket_size(n, buckets)
 
 
 @dataclasses.dataclass
@@ -92,3 +90,30 @@ class LMEngine:
 def make_engine(cfg: LMConfig, seed: int = 0, max_len: int = 2048) -> LMEngine:
     params = tfm.init_params(jax.random.key(seed), cfg)
     return LMEngine(cfg, params, max_len=max_len)
+
+
+class EngineBank:
+    """Tier id -> LMEngine, adapted to micro-batch execution.
+
+    The serving pipeline hands over lists of prompt arrays (one micro-
+    batch from ``MicroBatchQueue``); the bank right-pads them to a common
+    length and runs the tier's engine once. ``runners()`` exports the
+    per-tier callables the pipeline consumes — tests inject fakes with
+    the same signature.
+    """
+
+    def __init__(self, engines: dict[int, LMEngine], max_new: int = 16):
+        if not engines:
+            raise ValueError("EngineBank needs at least one tier engine")
+        self.engines = dict(engines)
+        self.max_new = max_new
+
+    def run_tier(self, tier: int, prompts: list[np.ndarray]) -> GenerationResult:
+        longest = max(p.shape[-1] for p in prompts)
+        batch = np.zeros((len(prompts), longest), np.int32)
+        for i, p in enumerate(prompts):
+            batch[i, :p.shape[-1]] = p
+        return self.engines[tier].generate(batch, max_new=self.max_new)
+
+    def runners(self) -> dict[int, "functools.partial"]:
+        return {t: functools.partial(self.run_tier, t) for t in self.engines}

@@ -1,0 +1,131 @@
+"""The pipelined serving flow: dispatch → micro-batch queues → engines,
+with streaming recalibration folded in.
+
+One :class:`ServingPipeline` owns
+
+  * a :class:`~repro.serving.router_service.SkewRouteDispatcher` running
+    the fused skew-metrics kernel over whole request batches (with an
+    optional drift-aware :class:`~repro.core.streaming_calibrate.\
+StreamingCalibrator` hot-swapping thresholds inline);
+  * one :class:`~repro.serving.scheduler.MicroBatchQueue` per tier, so
+    tier engines always execute full, shape-stable micro-batches;
+  * per-tier runner callables (an :class:`~repro.serving.engine.\
+EngineBank`'s ``runners()`` in production, fakes in tests);
+  * telemetry: queue depths, executed batches, recalibration count,
+    tier mix.
+
+The flow is synchronous by design — the parallelism lives inside the
+jitted kernels and engine steps; the host-side control plane stays a
+deterministic, testable state machine (same philosophy as TierScheduler's
+simulated clocks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.router_service import (BatchDispatchResult,
+                                          SkewRouteDispatcher)
+from repro.serving.scheduler import MicroBatchQueue
+
+
+@dataclasses.dataclass
+class ExecutedBatch:
+    """One micro-batch run on a tier engine (telemetry + test hook)."""
+
+    tier: int
+    size: int
+    result: object  # whatever the tier runner returned
+
+
+@dataclasses.dataclass
+class PipelineTelemetry:
+    n_submitted: int = 0
+    n_executed: int = 0
+    n_microbatches: int = 0
+    n_recalibrations: int = 0
+    tier_counts: dict = dataclasses.field(default_factory=dict)
+
+    def snapshot(self, queues: dict[int, MicroBatchQueue]) -> dict:
+        return {
+            "n_submitted": self.n_submitted,
+            "n_executed": self.n_executed,
+            "n_microbatches": self.n_microbatches,
+            "n_recalibrations": self.n_recalibrations,
+            "tier_counts": dict(self.tier_counts),
+            "queue_depths": {t: len(q) for t, q in queues.items()},
+        }
+
+
+class ServingPipeline:
+    """Batched dispatch through per-tier micro-batch queues to runners."""
+
+    def __init__(self, dispatcher: SkewRouteDispatcher,
+                 runners: dict[int, Callable[[list], object]],
+                 micro_batch: int = 8):
+        n_tiers = dispatcher.router.n_tiers
+        missing = set(range(n_tiers)) - set(runners)
+        if missing:
+            raise ValueError(f"runners missing for tiers {sorted(missing)}")
+        self.dispatcher = dispatcher
+        self.runners = dict(runners)
+        self.queues = {t: MicroBatchQueue(t, micro_batch)
+                       for t in range(n_tiers)}
+        self.telemetry = PipelineTelemetry(
+            tier_counts={t: 0 for t in range(n_tiers)})
+        self.executed: list[ExecutedBatch] = []
+
+    # -- internals ------------------------------------------------------------
+
+    def _run(self, tier: int, batch: list) -> None:
+        result = self.runners[tier](batch)
+        self.executed.append(ExecutedBatch(tier=tier, size=len(batch),
+                                           result=result))
+        self.telemetry.n_microbatches += 1
+        self.telemetry.n_executed += len(batch)
+
+    # -- the flow -------------------------------------------------------------
+
+    def submit(self, scores_desc: np.ndarray,
+               payloads: Optional[Sequence] = None,
+               n_valid: Optional[np.ndarray] = None) -> BatchDispatchResult:
+        """Dispatch a request batch and pump full micro-batches.
+
+        ``scores_desc``: [B, K] descending top-K retrieval scores.
+        ``payloads``: per-request items handed to the tier runner (prompt
+        token arrays in production); defaults to the dispatch records.
+        Returns the dispatch result (tiers, difficulty, all four metrics,
+        whether a drift hot-swap fired).
+        """
+        scores = np.asarray(scores_desc)
+        if payloads is not None and len(payloads) != scores.shape[0]:
+            raise ValueError(f"{scores.shape[0]} score rows but "
+                             f"{len(payloads)} payloads")
+        res: BatchDispatchResult = self.dispatcher.dispatch_batch(
+            scores, n_valid=n_valid, return_details=True)
+        items = payloads if payloads is not None else res.records
+        self.telemetry.n_submitted += len(items)
+        if res.recalibrated:
+            self.telemetry.n_recalibrations += 1
+        for rec, item in zip(res.records, items):
+            self.telemetry.tier_counts[rec.tier] += 1
+            for full in self.queues[rec.tier].push(item):
+                self._run(rec.tier, full)
+        return res
+
+    def flush(self) -> int:
+        """Drain partial micro-batches (burst tail / shutdown); returns
+        the number of requests executed."""
+        drained = 0
+        for tier, q in self.queues.items():
+            tail = q.flush()
+            if tail:
+                self._run(tier, tail)
+                drained += len(tail)
+        return drained
+
+    def stats(self) -> dict:
+        return self.telemetry.snapshot(self.queues)

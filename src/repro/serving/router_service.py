@@ -1,18 +1,28 @@
 """SkewRoute dispatcher: retrieval scores in, tier assignment out.
 
-This is the paper's Algorithm 1 as a serving component. Per request:
+This is the paper's Algorithm 1 as a serving component, running on the
+FUSED fast path. Per batch:
 
-  1. the retrieval stage hands over the top-K triple scores (descending);
-  2. the fused skew-metrics kernel (or its XLA oracle) computes the
-     difficulty metric;
-  3. the threshold router picks a tier; telemetry (tier counts, expected
+  1. the retrieval stage hands over the top-K triple scores (descending,
+     optionally ragged via per-row ``n_valid``);
+  2. ONE fused Pallas pass (``core.router.route_all_metrics``; interpret
+     mode off-TPU) computes all four difficulty metrics — the configured
+     metric is a column select, never a recompile;
+  3. the threshold router picks tiers; telemetry (tier counts, expected
      $ cost, mean difficulty) streams to the stats sink;
-  4. the request joins the chosen tier's batch queue
-     (serving/scheduler.py).
+  4. difficulty samples feed the attached streaming calibrator
+     (``core.streaming_calibrate``), which hot-swaps the thresholds when
+     live traffic drifts off the calibrated tier shares;
+  5. requests join their tier's micro-batch queue
+     (``serving/scheduler.MicroBatchQueue`` via ``serving/pipeline``).
 
-Thresholds are *hot-swappable*: the calibrator (core/calibrate.py) can
-re-fit them to a new traffic budget from any unlabeled sample without
-touching the serving path — the training-free property operationalized.
+Batch shapes are bucketed (pad to the next bucket, slice the pad off) so
+arbitrary request-batch sizes reuse a handful of compiled kernels.
+
+Thresholds stay *hot-swappable*: both the offline calibrator
+(core/calibrate.py) and the online one can re-fit them from unlabeled
+samples without touching the serving path — the training-free property
+operationalized.
 """
 
 from __future__ import annotations
@@ -24,10 +34,14 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import skewness
 from repro.core.calibrate import calibrate_multi_tier
 from repro.core.cost import CostModel
-from repro.core.router import RouterConfig, route_from_difficulty
+from repro.core.router import (RouteBatchResult, RouterConfig,
+                               route_all_metrics)
+from repro.core.streaming_calibrate import StreamingCalibrator
+from repro.serving.scheduler import bucket_size
+
+BATCH_BUCKETS = (8, 64, 256, 1024, 4096)
 
 
 @dataclasses.dataclass
@@ -39,10 +53,24 @@ class DispatchRecord:
 
 
 @dataclasses.dataclass
+class BatchDispatchResult:
+    """Per-batch fast-path output plus what the control plane did with it."""
+
+    records: list[DispatchRecord]
+    tiers: np.ndarray         # [B] int32
+    difficulty: np.ndarray    # [B] float32
+    metrics: np.ndarray       # [B, 4] float32 (area, cum_k, entropy, gini)
+    recalibrated: bool = False
+
+
+@dataclasses.dataclass
 class DispatcherStats:
     n_requests: int = 0
+    n_batches: int = 0
+    n_recalibrations: int = 0
     tier_counts: dict = dataclasses.field(default_factory=dict)
     total_cost: float = 0.0
+    mean_difficulty: float = 0.0  # running mean over all dispatched requests
 
     @property
     def large_call_ratio(self) -> float:
@@ -54,47 +82,28 @@ class DispatcherStats:
 
 class SkewRouteDispatcher:
     def __init__(self, router: RouterConfig, tier_names: Sequence[str],
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 calibrator: Optional[StreamingCalibrator] = None):
         if len(tier_names) != router.n_tiers:
             raise ValueError(f"{router.n_tiers} tiers but "
                              f"{len(tier_names)} tier names")
         self.router = router
         self.tier_names = list(tier_names)
         self.cost_model = cost_model or CostModel()
+        self.calibrator = calibrator
         self.stats = DispatcherStats(tier_counts={i: 0 for i in
                                                   range(router.n_tiers)})
         self._lock = threading.Lock()
         self._next_id = 0
 
-    def dispatch(self, scores_desc: np.ndarray) -> DispatchRecord:
-        """Route one request from its retrieval score vector."""
-        diff = float(skewness.difficulty(
-            jnp.asarray(scores_desc)[None], metric=self.router.metric,
-            p=self.router.cumulative_p)[0])
-        tier = int(route_from_difficulty(
-            jnp.asarray([diff]), jnp.asarray(self.router.thresholds))[0])
-        with self._lock:
-            rid = self._next_id
-            self._next_id += 1
-            self.stats.n_requests += 1
-            self.stats.tier_counts[tier] += 1
-            name = self.tier_names[tier]
-            if name in self.cost_model.cost_per_mtok:
-                self.stats.total_cost += self.cost_model.request_cost(name)
-        return DispatchRecord(request_id=rid, tier=tier, difficulty=diff,
-                              metric=self.router.metric)
+    # -- calibration ----------------------------------------------------------
 
-    def dispatch_batch(self, scores_desc: np.ndarray) -> np.ndarray:
-        """[B, K] -> [B] tier ids (vectorized fast path)."""
-        diff = skewness.difficulty(jnp.asarray(scores_desc),
-                                   metric=self.router.metric,
-                                   p=self.router.cumulative_p)
-        tiers = route_from_difficulty(diff, jnp.asarray(self.router.thresholds))
-        with self._lock:
-            for t in np.asarray(tiers):
-                self.stats.n_requests += 1
-                self.stats.tier_counts[int(t)] += 1
-        return np.asarray(tiers)
+    def attach_calibrator(self, target_shares: Sequence[float],
+                          **knobs) -> StreamingCalibrator:
+        """Wire a drift-aware streaming calibrator into the dispatch flow."""
+        self.calibrator = StreamingCalibrator(self.router, target_shares,
+                                              **knobs)
+        return self.calibrator
 
     def recalibrate(self, calibration_scores: np.ndarray,
                     tier_shares: Sequence[float]) -> RouterConfig:
@@ -104,4 +113,82 @@ class SkewRouteDispatcher:
             metric=self.router.metric, cumulative_p=self.router.cumulative_p)
         with self._lock:
             self.router = new_router
+            self.stats.n_recalibrations += 1
+            if self.calibrator is not None:
+                self.calibrator.config = new_router
         return new_router
+
+    # -- dispatch -------------------------------------------------------------
+
+    def dispatch(self, scores_desc: np.ndarray,
+                 n_valid: Optional[int] = None) -> DispatchRecord:
+        """Route one request — same fused kernel, batch of one (bucketed
+        to the smallest batch bucket, so it shares the compiled kernel
+        with every other small batch)."""
+        nv = None if n_valid is None else np.asarray([n_valid])
+        return self.dispatch_batch(np.asarray(scores_desc)[None], n_valid=nv,
+                                   return_details=True).records[0]
+
+    def dispatch_batch(self, scores_desc: np.ndarray,
+                       n_valid: Optional[np.ndarray] = None,
+                       return_details: bool = False):
+        """[B, K] (+ optional [B] n_valid) -> [B] tier ids.
+
+        The vectorized fast path: one fused kernel call per bucketed batch
+        shape. With ``return_details=True`` returns a
+        :class:`BatchDispatchResult` carrying per-request records and the
+        full metric matrix (the pipeline and telemetry consumers).
+        """
+        scores = np.asarray(scores_desc)
+        b, k = scores.shape
+        bpad = bucket_size(b, BATCH_BUCKETS)
+        if bpad != b:
+            scores = np.concatenate(
+                [scores, np.zeros((bpad - b, k), scores.dtype)])
+        # always pass a concrete n_valid so every bucket shape compiles
+        # the kernel exactly once (None vs array would be two traces)
+        nv = np.full(bpad, k, np.int32)
+        if n_valid is not None:
+            nv[:b] = np.asarray(n_valid, np.int32)
+        nv[b:] = 1  # padded rows: degenerate but well-defined
+        result: RouteBatchResult = route_all_metrics(
+            jnp.asarray(scores), self.router, n_valid=jnp.asarray(nv))
+        tiers = np.asarray(result.tiers)[:b]
+        diff = np.asarray(result.difficulty)[:b]
+        metrics = np.asarray(result.metrics)[:b]
+
+        recalibrated = False
+        with self._lock:
+            first_id = self._next_id
+            self._next_id += b
+            counts = np.bincount(tiers, minlength=self.router.n_tiers)
+            total = self.stats.n_requests
+            self.stats.n_requests += b
+            self.stats.n_batches += 1
+            self.stats.mean_difficulty = (
+                (self.stats.mean_difficulty * total + float(diff.sum()))
+                / max(self.stats.n_requests, 1))
+            for t, c in enumerate(counts):
+                if not c:
+                    continue
+                self.stats.tier_counts[t] += int(c)
+                name = self.tier_names[t]
+                if name in self.cost_model.cost_per_mtok:
+                    self.stats.total_cost += (
+                        self.cost_model.request_cost(name) * int(c))
+            if self.calibrator is not None:
+                new_config = self.calibrator.observe(diff)
+                if new_config is not None:
+                    self.router = new_config
+                    self.stats.n_recalibrations += 1
+                    recalibrated = True
+
+        if not return_details:
+            return tiers
+        records = [DispatchRecord(request_id=first_id + i, tier=int(tiers[i]),
+                                  difficulty=float(diff[i]),
+                                  metric=self.router.metric)
+                   for i in range(b)]
+        return BatchDispatchResult(records=records, tiers=tiers,
+                                   difficulty=diff, metrics=metrics,
+                                   recalibrated=recalibrated)

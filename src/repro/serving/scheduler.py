@@ -8,6 +8,14 @@ re-dispatched to the fastest healthy replica of the SAME tier (quality is
 tier-sticky; latency is not). Replica health comes from the fault-
 tolerance heartbeats.
 
+Upstream of the replica pools sits :class:`MicroBatchQueue`: the batched
+dispatcher emits tier ids for a whole request batch at once, and each
+tier accumulates its requests into fixed-size micro-batches so the tier
+engines always see full, shape-bucketed batches (one compiled step per
+bucket) instead of singleton calls. ``serving/pipeline.py`` wires
+dispatch → micro-batch queues → engines → streaming recalibration into
+one flow.
+
 Runs in-process with simulated replica clocks for tests; the dispatch
 logic is the deliverable (the engine call is injected).
 """
@@ -64,6 +72,11 @@ class TierScheduler:
 
     def submit(self, req: Request) -> None:
         heapq.heappush(self.pending, (req.deadline, req.request_id, req))
+
+    def submit_batch(self, reqs: list[Request]) -> None:
+        """Admit a whole micro-batch (the batched-dispatch fast path)."""
+        for req in reqs:
+            self.submit(req)
 
     def _work(self, req: Request) -> float:
         return (req.prompt_len * 0.1 + req.max_new) * self.base_token_time
@@ -127,3 +140,65 @@ class TierScheduler:
         lats = [r.finished_at - r.submitted_at for r in self.done
                 if r.finished_at is not None]
         return float(np.percentile(lats, 99)) if lats else float("nan")
+
+
+def bucket_size(n: int, buckets: tuple[int, ...]) -> int:
+    """Round ``n`` up to the next bucket (multiples of the last bucket
+    beyond it) — shared by engine prompt-length and dispatcher batch-size
+    bucketing so jitted shapes stay few."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // buckets[-1]) * buckets[-1]
+
+
+# -- micro-batch accumulation (between dispatcher and tier engines) -----------
+
+
+class MicroBatchQueue:
+    """Per-tier accumulator turning a stream of routed requests into
+    fixed-size micro-batches.
+
+    The batched dispatcher assigns tiers for B requests in one kernel
+    call; each tier then wants its requests executed together so the
+    engine's jitted step is reused at a stable batch shape. ``push``
+    returns completed micro-batches as they fill; ``flush`` drains the
+    remainder (tail of a traffic burst / shutdown).
+    """
+
+    def __init__(self, tier: int, batch_size: int = 8):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.tier = tier
+        self.batch_size = batch_size
+        self._items: list = []
+        self.n_pushed = 0
+        self.n_batches = 0
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def push(self, item) -> list[list]:
+        """Add one routed request; returns zero or more FULL batches."""
+        self._items.append(item)
+        self.n_pushed += 1
+        out = []
+        while len(self._items) >= self.batch_size:
+            out.append(self._items[:self.batch_size])
+            self._items = self._items[self.batch_size:]
+            self.n_batches += 1
+        return out
+
+    def push_many(self, items) -> list[list]:
+        out = []
+        for it in items:
+            out.extend(self.push(it))
+        return out
+
+    def flush(self) -> Optional[list]:
+        """Drain the partial tail batch, if any."""
+        if not self._items:
+            return None
+        out, self._items = self._items, []
+        self.n_batches += 1
+        return out

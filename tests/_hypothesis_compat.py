@@ -4,9 +4,143 @@ Uses real `hypothesis` when installed; otherwise provides a functional
 subset (seeded exhaustive-ish sampling with shrink-free reporting) so the
 property tests still run in this offline container. Strategies cover what
 the suite needs: integers, floats, sampled_from, lists, and numpy arrays.
+
+The fallback implementation (``fallback_given`` / ``fallback_st``) is
+defined unconditionally so the meta-tests can exercise it even when real
+hypothesis is importable; ``given`` / ``st`` alias whichever path is
+active.
 """
 
 from __future__ import annotations
+
+import functools
+import inspect
+import itertools  # noqa: F401 - kept for strategy authors
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred, max_tries: int = 100):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict")
+        return _Strategy(draw)
+
+
+class fallback_st:  # noqa: N801 - mimic hypothesis.strategies namespace
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=-1e3, max_value=1e3, allow_nan=False,
+               allow_infinity=False, width=64):
+        return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                       max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=8):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def arrays(shape_strategy, lo=-3.0, hi=3.0, dtype="float32"):
+        def draw(rng):
+            shape = shape_strategy.draw(rng) if hasattr(
+                shape_strategy, "draw") else shape_strategy
+            return rng.uniform(lo, hi, shape).astype(dtype)
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.draw(rng)
+                                           for s in strategies))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def fallback_settings(**_kwargs):  # noqa: D401 - no-op decorator factory
+    def deco(f):
+        return f
+    return deco
+
+
+_POSITIONAL = (inspect.Parameter.POSITIONAL_ONLY,
+               inspect.Parameter.POSITIONAL_OR_KEYWORD)
+
+
+def fallback_given(*strategies, n_examples: int = 12, **kw_strategies):
+    """Offline stand-in for ``hypothesis.given``.
+
+    Follows hypothesis's convention: positional strategies fill the
+    RIGHTMOST positional parameters of the wrapped function; keyword
+    strategies fill their named parameters. Crucially the wrapper's
+    ``__signature__`` drops the drawn parameters — ``functools.wraps``
+    alone would make pytest look for fixtures named after them (the seed
+    bug that broke ``test_int8_quantization_error_bound`` at collection).
+    """
+    def deco(f):
+        sig = inspect.signature(f)
+        params = list(sig.parameters.values())
+        kw_names = set(kw_strategies)
+        pos_names = [p.name for p in params
+                     if p.kind in _POSITIONAL and p.name not in kw_names]
+        n_pos = len(strategies)
+        if n_pos > len(pos_names):
+            raise TypeError(
+                f"@given got {n_pos} positional strategies but "
+                f"{f.__name__} has only {len(pos_names)} fillable params")
+        drawn_names = pos_names[len(pos_names) - n_pos:] if n_pos else []
+        missing = kw_names - set(sig.parameters)
+        if missing:
+            raise TypeError(f"@given keyword strategies {sorted(missing)} "
+                            f"not parameters of {f.__name__}")
+        remaining = [p for p in params
+                     if p.name not in kw_names and p.name not in drawn_names]
+
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            for i in range(n_examples):
+                rng = np.random.default_rng(1000 + i)
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, strategies)}
+                drawn.update({k: s.draw(rng)
+                              for k, s in kw_strategies.items()})
+                try:
+                    f(*args, **drawn, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"property failed on example {i}: "
+                        f"drawn={drawn}: {e}") from e
+        # pytest inspects __signature__ for fixture injection: only the
+        # NON-drawn parameters (real fixtures) may remain visible.
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco
+
 
 try:  # pragma: no cover - prefer the real library when available
     from hypothesis import HealthCheck
@@ -25,90 +159,6 @@ try:  # pragma: no cover - prefer the real library when available
         return deco
 except ImportError:  # offline fallback
     HAVE_HYPOTHESIS = False
-
-    import functools
-    import itertools
-
-    import numpy as np
-
-    class _Strategy:
-        def __init__(self, draw):
-            self._draw = draw
-
-        def draw(self, rng):
-            return self._draw(rng)
-
-        def map(self, f):
-            return _Strategy(lambda rng: f(self._draw(rng)))
-
-        def filter(self, pred, max_tries: int = 100):
-            def draw(rng):
-                for _ in range(max_tries):
-                    v = self._draw(rng)
-                    if pred(v):
-                        return v
-                raise ValueError("filter predicate too strict")
-            return _Strategy(draw)
-
-    class st:  # noqa: N801 - mimic hypothesis.strategies namespace
-        @staticmethod
-        def integers(min_value=0, max_value=100):
-            return _Strategy(lambda rng: int(rng.integers(min_value,
-                                                          max_value + 1)))
-
-        @staticmethod
-        def floats(min_value=-1e3, max_value=1e3, allow_nan=False,
-                   allow_infinity=False, width=64):
-            return _Strategy(lambda rng: float(rng.uniform(min_value,
-                                                           max_value)))
-
-        @staticmethod
-        def sampled_from(options):
-            options = list(options)
-            return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
-
-        @staticmethod
-        def lists(elem, min_size=0, max_size=8):
-            def draw(rng):
-                n = int(rng.integers(min_size, max_size + 1))
-                return [elem.draw(rng) for _ in range(n)]
-            return _Strategy(draw)
-
-        @staticmethod
-        def arrays(shape_strategy, lo=-3.0, hi=3.0, dtype="float32"):
-            def draw(rng):
-                shape = shape_strategy.draw(rng) if hasattr(
-                    shape_strategy, "draw") else shape_strategy
-                return rng.uniform(lo, hi, shape).astype(dtype)
-            return _Strategy(draw)
-
-        @staticmethod
-        def tuples(*strategies):
-            return _Strategy(lambda rng: tuple(s.draw(rng)
-                                               for s in strategies))
-
-        @staticmethod
-        def booleans():
-            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
-
-    def settings(**_kwargs):  # noqa: D401 - no-op decorator factory
-        def deco(f):
-            return f
-        return deco
-
-    def given(*strategies, n_examples: int = 12, **kw_strategies):
-        def deco(f):
-            @functools.wraps(f)
-            def wrapper(*args, **kwargs):
-                for i in range(n_examples):
-                    rng = np.random.default_rng(1000 + i)
-                    drawn = [s.draw(rng) for s in strategies]
-                    kdrawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
-                    try:
-                        f(*args, *drawn, **kdrawn, **kwargs)
-                    except AssertionError as e:
-                        raise AssertionError(
-                            f"property failed on example {i}: args={drawn} "
-                            f"kwargs={kdrawn}: {e}") from e
-            return wrapper
-        return deco
+    st = fallback_st
+    settings = fallback_settings
+    given = fallback_given

@@ -1,0 +1,104 @@
+"""Meta-tests for the property-testing shim (tests/_hypothesis_compat.py).
+
+The seed bug: the offline ``given`` fallback preserved the wrapped
+function's signature via ``functools.wraps``, so pytest treated drawn
+strategy parameters as fixtures and failed at collection. These tests pin
+the fix — drawn parameters must vanish from the wrapper's signature —
+under the fallback path unconditionally, and sanity-check whichever path
+(real hypothesis or fallback) is active.
+"""
+
+import inspect
+
+import pytest
+
+from tests._hypothesis_compat import (HAVE_HYPOTHESIS, fallback_given,
+                                      fallback_st, given, st)
+
+
+# -- fallback path (always exercised, even when hypothesis is installed) ------
+
+def test_fallback_signature_drops_positional_drawn_params():
+    @fallback_given(fallback_st.integers(0, 5), fallback_st.integers(0, 5))
+    def prop(a, b):
+        assert 0 <= a <= 5 and 0 <= b <= 5
+
+    assert list(inspect.signature(prop).parameters) == []
+    prop()  # runs all examples with no outside arguments
+
+
+def test_fallback_signature_keeps_fixture_params():
+    """Fixtures precede drawn params (hypothesis fills from the right)."""
+    @fallback_given(fallback_st.integers(0, 5))
+    def prop(fixture_like, n):
+        assert fixture_like == "ctx" and 0 <= n <= 5
+
+    assert list(inspect.signature(prop).parameters) == ["fixture_like"]
+    prop("ctx")
+
+
+def test_fallback_keyword_strategies():
+    @fallback_given(n=fallback_st.integers(1, 3))
+    def prop(n):
+        assert 1 <= n <= 3
+
+    assert list(inspect.signature(prop).parameters) == []
+    prop()
+
+
+def test_fallback_failure_reports_drawn_example():
+    @fallback_given(fallback_st.integers(10, 20), n_examples=3)
+    def prop(n):
+        assert n < 0, "always fails"
+
+    with pytest.raises(AssertionError, match="drawn="):
+        prop()
+
+
+def test_fallback_rejects_too_many_strategies():
+    with pytest.raises(TypeError):
+        @fallback_given(fallback_st.integers(), fallback_st.integers())
+        def prop(only_one):
+            pass
+
+
+def test_fallback_rejects_unknown_keyword_strategy():
+    with pytest.raises(TypeError):
+        @fallback_given(bogus=fallback_st.integers())
+        def prop(n):
+            pass
+
+
+def test_fallback_is_deterministic():
+    seen_a, seen_b = [], []
+
+    @fallback_given(fallback_st.integers(0, 10_000), n_examples=5)
+    def prop_a(n):
+        seen_a.append(n)
+
+    @fallback_given(fallback_st.integers(0, 10_000), n_examples=5)
+    def prop_b(n):
+        seen_b.append(n)
+
+    prop_a()
+    prop_b()
+    assert seen_a == seen_b and len(seen_a) == 5
+
+
+# -- active path (real hypothesis when installed, fallback otherwise) ---------
+
+@given(st.integers(0, 100))
+def test_active_given_collects_and_runs(n):
+    """This test existing AT ALL is the regression check: under the seed
+    shim, pytest failed to collect any positional-@given test ("fixture
+    'n' not found")."""
+    assert 0 <= n <= 100
+
+
+def test_active_path_reports_which_backend():
+    # Not an assertion of environment — just pins that the flag and the
+    # aliases agree so future refactors keep them consistent.
+    if HAVE_HYPOTHESIS:
+        assert given is not fallback_given
+    else:
+        assert given is fallback_given and st is fallback_st

@@ -153,8 +153,8 @@ def test_error_feedback_reduces_bias():
 
 def test_cross_pod_mean_shard_map():
     from repro.distributed.compression import cross_pod_mean_int8
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((1,), ("pod",))
     grads = {"w": jnp.arange(256.0)}
     out = cross_pod_mean_int8(mesh)(grads)
     np.testing.assert_allclose(out["w"], grads["w"], rtol=1e-2, atol=1.1)
@@ -209,8 +209,7 @@ def test_param_rules_divisibility_guard():
     from jax.sharding import PartitionSpec as P
     from repro.distributed import sharding as shd
     from repro.launch.mesh import make_host_mesh
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh()
     with shd.use_mesh(mesh):
         leaf = jax.ShapeDtypeStruct((64, 47), jnp.float32)  # 47 % 1 == 0
         spec = shd.param_pspec(

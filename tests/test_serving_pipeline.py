@@ -1,0 +1,151 @@
+"""Pipelined serving-flow tests: dispatch -> per-tier micro-batch queues
+-> tier runners, with telemetry and inline recalibration."""
+
+import numpy as np
+import pytest
+
+from repro.core.router import RouterConfig
+from repro.serving.pipeline import ServingPipeline
+from repro.serving.router_service import SkewRouteDispatcher
+from repro.serving.scheduler import MicroBatchQueue
+
+
+def desc_scores(rng, b, k=100):
+    return np.sort(rng.uniform(0.01, 1, (b, k)).astype(np.float32),
+                   axis=1)[:, ::-1].copy()
+
+
+# -- MicroBatchQueue ----------------------------------------------------------
+
+def test_microbatch_queue_emits_full_batches_in_order():
+    q = MicroBatchQueue(tier=0, batch_size=3)
+    emitted = []
+    for i in range(10):
+        emitted.extend(q.push(i))
+    assert emitted == [[0, 1, 2], [3, 4, 5], [6, 7, 8]]
+    assert len(q) == 1 and q.n_pushed == 10 and q.n_batches == 3
+    assert q.flush() == [9]
+    assert q.flush() is None and len(q) == 0
+
+
+def test_microbatch_queue_push_many_and_validation():
+    with pytest.raises(ValueError):
+        MicroBatchQueue(0, batch_size=0)
+    q = MicroBatchQueue(0, batch_size=4)
+    batches = q.push_many(range(9))
+    assert batches == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+
+# -- ServingPipeline ----------------------------------------------------------
+
+def _mk_pipeline(rng, micro_batch=4, thresholds=None, calibrator=False):
+    scores = desc_scores(rng, 64)
+    if thresholds is None:
+        from repro.core import skewness
+        import jax.numpy as jnp
+        diff = np.asarray(skewness.difficulty(jnp.asarray(scores),
+                                              metric="entropy"))
+        thresholds = (float(np.quantile(diff, 0.6)),)
+    d = SkewRouteDispatcher(
+        RouterConfig(metric="entropy", thresholds=thresholds),
+        ["small", "large"])
+    if calibrator:
+        d.attach_calibrator([0.6, 0.4], window=128, min_samples=32,
+                            tolerance=0.05, cooldown=64)
+    ran = {0: [], 1: []}
+    pipe = ServingPipeline(d, {t: (lambda t=t: (lambda b: ran[t].append(b)))()
+                               for t in (0, 1)}, micro_batch=micro_batch)
+    return pipe, d, ran, scores
+
+
+def test_pipeline_routes_everything_exactly_once():
+    rng = np.random.default_rng(0)
+    pipe, d, ran, scores = _mk_pipeline(rng)
+    res = pipe.submit(scores)
+    pipe.flush()
+    executed = sum(len(b) for bs in ran.values() for b in bs)
+    assert executed == 64 == pipe.telemetry.n_executed
+    assert pipe.telemetry.n_submitted == 64
+    # every executed record went to the tier the dispatcher assigned
+    for tier, batches in ran.items():
+        for batch in batches:
+            for rec in batch:
+                assert rec.tier == tier
+    stats = pipe.stats()
+    assert stats["queue_depths"] == {0: 0, 1: 0}
+    assert stats["tier_counts"][0] + stats["tier_counts"][1] == 64
+    assert res.metrics.shape == (64, 4)
+
+
+def test_pipeline_full_batches_before_flush():
+    rng = np.random.default_rng(1)
+    pipe, d, ran, scores = _mk_pipeline(rng, micro_batch=4)
+    pipe.submit(scores)
+    # only FULL micro-batches ran; the remainder sits in the queues
+    assert all(len(b) == 4 for bs in ran.values() for b in bs)
+    queued = sum(pipe.stats()["queue_depths"].values())
+    assert pipe.telemetry.n_executed + queued == 64
+    drained = pipe.flush()
+    assert drained == queued
+    assert pipe.telemetry.n_executed == 64
+
+
+def test_pipeline_custom_payloads_and_mismatch():
+    rng = np.random.default_rng(2)
+    pipe, d, ran, scores = _mk_pipeline(rng, micro_batch=8)
+    payloads = [f"req-{i}" for i in range(64)]
+    pipe.submit(scores, payloads)
+    pipe.flush()
+    seen = sorted(p for bs in ran.values() for b in bs for p in b)
+    assert seen == sorted(payloads)
+    with pytest.raises(ValueError):
+        pipe.submit(scores, payloads[:3])
+
+
+def test_pipeline_missing_runner_rejected():
+    rng = np.random.default_rng(3)
+    d = SkewRouteDispatcher(RouterConfig(metric="gini", thresholds=(0.0,)),
+                            ["small", "large"])
+    with pytest.raises(ValueError, match="missing"):
+        ServingPipeline(d, {0: lambda b: None})
+
+
+def test_pipeline_counts_recalibrations():
+    rng = np.random.default_rng(4)
+    # thresholds far off target -> calibrator must fire during the stream
+    pipe, d, ran, _ = _mk_pipeline(rng, thresholds=(0.0,), calibrator=True)
+    for _ in range(4):
+        pipe.submit(desc_scores(rng, 64))
+    pipe.flush()
+    assert d.stats.n_recalibrations >= 1
+    assert pipe.telemetry.n_recalibrations == d.stats.n_recalibrations
+
+
+def test_pipeline_with_engine_bank():
+    """Real LMEngines at toy scale: prompts flow through micro-batches
+    into tier-appropriate generate() calls."""
+    import jax.numpy as jnp
+    from repro.models.layers import LMConfig
+    from repro.serving.engine import EngineBank, make_engine
+    rng = np.random.default_rng(5)
+    bank = EngineBank({
+        0: make_engine(LMConfig(name="s", n_layers=1, d_model=32, n_heads=2,
+                                n_kv_heads=1, head_dim=16, d_ff=64,
+                                vocab=128, dtype=jnp.float32)),
+        1: make_engine(LMConfig(name="l", n_layers=2, d_model=32, n_heads=2,
+                                n_kv_heads=1, head_dim=16, d_ff=64,
+                                vocab=128, dtype=jnp.float32)),
+    }, max_new=4)
+    d = SkewRouteDispatcher(RouterConfig(metric="entropy",
+                                         thresholds=(6.0,)),
+                            ["small", "large"])
+    pipe = ServingPipeline(d, bank.runners(), micro_batch=4)
+    scores = desc_scores(rng, 8)
+    prompts = [rng.integers(1, 128, rng.integers(3, 9)).astype(np.int32)
+               for _ in range(8)]
+    pipe.submit(scores, prompts)
+    pipe.flush()
+    assert pipe.telemetry.n_executed == 8
+    for b in pipe.executed:
+        assert b.result.tokens.shape[0] == b.size
+        assert b.result.tokens.shape[1] == 4

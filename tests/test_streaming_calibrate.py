@@ -1,0 +1,189 @@
+"""Streaming calibrator tests: stationary convergence to the batch
+quantile, drift-triggered hot-swap with share recovery, windowing
+mechanics, and the dispatcher integration."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import skewness as sk
+from repro.core.calibrate import calibrate_threshold
+from repro.core.router import RouterConfig, route_from_difficulty
+from repro.core.streaming_calibrate import SlidingWindow, StreamingCalibrator
+
+
+def desc_scores(rng, b, k=100, alpha_lo=0.2, alpha_hi=2.5):
+    """Synthetic retrieval batches: per-row power-law decay with a random
+    exponent — flat rows (small alpha) are 'hard', spiky rows 'easy'."""
+    alphas = rng.uniform(alpha_lo, alpha_hi, b)
+    base = 1.0 / np.arange(1, k + 1)[None, :] ** alphas[:, None]
+    noise = rng.uniform(0.95, 1.05, (b, k))
+    return np.sort((base * noise).astype(np.float32), axis=1)[:, ::-1].copy()
+
+
+# -- SlidingWindow ------------------------------------------------------------
+
+def test_window_wraparound_keeps_last_capacity_samples():
+    w = SlidingWindow(16)
+    stream = np.arange(100, dtype=np.float32)
+    for i in range(0, 100, 7):  # odd batch size forces mid-buffer wraps
+        w.push(stream[i:i + 7])
+    assert len(w) == 16 and w.total_seen == 100
+    np.testing.assert_array_equal(np.sort(w.values()), stream[-16:])
+    assert float(w.quantile(0.5)) == np.quantile(stream[-16:], 0.5)
+
+
+def test_window_oversized_batch_keeps_tail():
+    w = SlidingWindow(8)
+    w.push(np.arange(50, dtype=np.float32))
+    np.testing.assert_array_equal(np.sort(w.values()), np.arange(42, 50))
+
+
+def test_window_validation():
+    with pytest.raises(ValueError):
+        SlidingWindow(1)
+    with pytest.raises(ValueError):
+        SlidingWindow(8).quantile(0.5)
+
+
+# -- calibrator validation ----------------------------------------------------
+
+def test_calibrator_validates_shares_and_tolerance():
+    cfg = RouterConfig(metric="entropy", thresholds=(1.0,))
+    with pytest.raises(ValueError):  # wrong arity
+        StreamingCalibrator(cfg, [0.5, 0.3, 0.2])
+    with pytest.raises(ValueError):  # doesn't sum to 1
+        StreamingCalibrator(cfg, [0.5, 0.4])
+    with pytest.raises(ValueError):
+        StreamingCalibrator(cfg, [0.7, 0.3], tolerance=0.0)
+
+
+# -- stationary convergence ---------------------------------------------------
+
+def test_stationary_stream_converges_to_batch_quantile():
+    """Feeding a stationary difficulty stream: the calibrator's fitted
+    threshold equals calibrate_threshold's quantile on the same sample."""
+    rng = np.random.default_rng(0)
+    scores = desc_scores(rng, 600)
+    diff = np.asarray(sk.difficulty(jnp.asarray(scores), metric="entropy"))
+    target_large = 0.3
+    cal = StreamingCalibrator(
+        RouterConfig(metric="entropy", thresholds=(0.0,)),  # badly off
+        [1.0 - target_large, target_large],
+        window=512, min_samples=128, tolerance=0.05, cooldown=128)
+    for i in range(0, 600, 32):
+        cal.observe(diff[i:i + 32])
+    assert cal.n_swaps >= 1
+    theta_batch = calibrate_threshold(jnp.asarray(scores), target_large,
+                                      metric="entropy")
+    # same quantile rule, window-sized sample: agreement within the
+    # sampling noise of a 512-window
+    assert abs(cal.config.thresholds[0] - theta_batch) < 0.15
+    shares = cal.observed_shares()
+    assert abs(shares[1] - target_large) < 0.06
+
+
+def test_no_swap_when_already_on_target():
+    rng = np.random.default_rng(1)
+    scores = desc_scores(rng, 400)
+    diff = np.asarray(sk.difficulty(jnp.asarray(scores), metric="entropy"))
+    theta = float(np.quantile(diff, 0.7))
+    cal = StreamingCalibrator(RouterConfig(metric="entropy",
+                                           thresholds=(theta,)),
+                              [0.7, 0.3], window=256, min_samples=64,
+                              tolerance=0.08)
+    for i in range(0, 400, 32):
+        assert cal.observe(diff[i:i + 32]) is None
+    assert cal.n_swaps == 0
+
+
+# -- drift --------------------------------------------------------------------
+
+def test_drift_triggers_hotswap_and_recovers_shares():
+    """Mid-stream distribution shift: the tier mix walks off target, a
+    swap fires, and post-swap shares return to target on the new traffic."""
+    rng = np.random.default_rng(2)
+    easy_era = desc_scores(rng, 800, alpha_lo=1.2, alpha_hi=2.5)   # spiky
+    hard_era = desc_scores(rng, 1600, alpha_lo=0.1, alpha_hi=0.9)  # flat
+    d_easy = np.asarray(sk.difficulty(jnp.asarray(easy_era), metric="gini"))
+    d_hard = np.asarray(sk.difficulty(jnp.asarray(hard_era), metric="gini"))
+
+    target = (0.7, 0.3)
+    theta0 = float(np.quantile(d_easy, target[0]))  # calibrated on era 1
+    cal = StreamingCalibrator(RouterConfig(metric="gini",
+                                           thresholds=(theta0,)),
+                              target, window=512, min_samples=128,
+                              tolerance=0.08, cooldown=256)
+    for i in range(0, 800, 32):
+        cal.observe(d_easy[i:i + 32])
+    swaps_before_drift = cal.n_swaps
+
+    # distribution shift: everything suddenly routes large under theta0
+    pre_shares = route_from_difficulty(jnp.asarray(d_hard),
+                                       jnp.asarray([theta0]))
+    assert float(jnp.mean(pre_shares > 0)) > 0.6  # the drift is real
+
+    for i in range(0, 1600, 32):
+        cal.observe(d_hard[i:i + 32])
+    assert cal.n_swaps > swaps_before_drift
+    event = cal.events[-1]
+    assert event.max_drift > 0.08
+    # recovered: the window (now pure era-2 traffic) sits on target
+    shares = cal.observed_shares()
+    assert abs(shares[1] - target[1]) < 0.08
+
+
+def test_cooldown_bounds_flapping():
+    rng = np.random.default_rng(3)
+    diff = rng.normal(0, 1, 4000).astype(np.float32)
+    cal = StreamingCalibrator(RouterConfig(metric="entropy",
+                                           thresholds=(100.0,)),  # way off
+                              [0.5, 0.5], window=512, min_samples=64,
+                              tolerance=0.02, cooldown=1000)
+    for i in range(0, 4000, 16):
+        cal.observe(diff[i:i + 16])
+    assert cal.n_swaps <= 4  # ~1 per cooldown period, not per batch
+
+
+# -- three-tier fit -----------------------------------------------------------
+
+def test_multi_tier_fit_matches_window_quantiles():
+    rng = np.random.default_rng(4)
+    diff = rng.uniform(0, 10, 1024).astype(np.float32)
+    cal = StreamingCalibrator(
+        RouterConfig(metric="area", thresholds=(1.0, 2.0)),
+        [0.5, 0.3, 0.2], window=1024, min_samples=64)
+    cal.window.push(diff)
+    cfg = cal.fit_config()
+    np.testing.assert_allclose(
+        cfg.thresholds, np.quantile(diff, [0.5, 0.8]), rtol=1e-5)
+    tiers = np.sum(diff[:, None] > np.asarray(cfg.thresholds)[None, :],
+                   axis=1)
+    np.testing.assert_allclose(
+        [(tiers == t).mean() for t in range(3)], [0.5, 0.3, 0.2], atol=0.01)
+
+
+# -- dispatcher integration ---------------------------------------------------
+
+def test_dispatcher_hotswaps_under_drift():
+    """End to end: dispatcher calibrated for a 30% large ratio keeps it
+    through a traffic drift because the streaming calibrator swaps the
+    thresholds inline."""
+    from repro.serving.router_service import SkewRouteDispatcher
+    rng = np.random.default_rng(5)
+    easy = desc_scores(rng, 512, alpha_lo=1.2, alpha_hi=2.5)
+    hard = desc_scores(rng, 1024, alpha_lo=0.1, alpha_hi=0.9)
+    theta = calibrate_threshold(jnp.asarray(easy), 0.3, metric="entropy")
+    d = SkewRouteDispatcher(RouterConfig(metric="entropy",
+                                         thresholds=(theta,)),
+                            ["small", "large"])
+    d.attach_calibrator([0.7, 0.3], window=256, min_samples=64,
+                        tolerance=0.08, cooldown=128)
+    for i in range(0, 512, 64):
+        d.dispatch_batch(easy[i:i + 64])
+    for i in range(0, 1024, 64):
+        d.dispatch_batch(hard[i:i + 64])
+    assert d.stats.n_recalibrations >= 1
+    # post-swap traffic routes on budget again
+    tail = d.dispatch_batch(desc_scores(rng, 256, alpha_lo=0.1, alpha_hi=0.9))
+    assert abs((tail == 1).mean() - 0.3) < 0.1
