@@ -22,8 +22,9 @@ import functools
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import skewness
+from repro.api import OracleBackend
 from repro.core.cost import PAPER_QUALITY
+from repro.core.router import difficulty_from_metrics
 from repro.retrieval import scorer as sc
 from repro.retrieval import synthetic
 
@@ -96,21 +97,22 @@ def oracle_quality(records, model: str, dataset: str,
 
 
 def difficulty_matrix(records, p_cdf: float = 0.95) -> dict[str, np.ndarray]:
-    """All four difficulty metrics for every record (larger = harder)."""
+    """All four difficulty metrics for every record (larger = harder).
+
+    Runs the `repro.api` oracle backend (XLA `core.skewness`, stacked in
+    kernel column order) over the ragged score rows — the same path the
+    serving session uses with ``backend="oracle"``."""
     pad_k = max(len(r["scores"]) for r in records)
     mat = np.zeros((len(records), pad_k), np.float32)
-    mask = np.zeros((len(records), pad_k), bool)
+    n_valid = np.zeros(len(records), np.int32)
     for i, r in enumerate(records):
         k = len(r["scores"])
         mat[i, :k] = r["scores"]
-        mask[i, :k] = True
-    s, m = jnp.asarray(mat), jnp.asarray(mask)
-    return {
-        "area": np.asarray(skewness.difficulty_area(s, m)),
-        "cumulative": np.asarray(skewness.difficulty_cumulative(s, p_cdf, m)),
-        "entropy": np.asarray(skewness.difficulty_entropy(s, m)),
-        "gini": np.asarray(skewness.difficulty_gini(s, m)),
-    }
+        n_valid[i] = k
+    raw = OracleBackend().metrics(jnp.asarray(mat), p_cdf=p_cdf,
+                                  n_valid=jnp.asarray(n_valid))
+    return {name: np.asarray(difficulty_from_metrics(raw, name))
+            for name in ("area", "cumulative", "entropy", "gini")}
 
 
 @dataclasses.dataclass

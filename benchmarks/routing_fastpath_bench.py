@@ -6,13 +6,18 @@ bench pins the serving-side realization. Two paths over identical traffic:
 
   oracle/per-request : the seed serving path — one `skewness.difficulty`
                        jit call + threshold compare PER REQUEST.
-  kernel/batched     : `core.router.route_all_metrics` — ONE fused Pallas
-                       pass (interpret mode off-TPU) for the whole batch,
-                       all four metrics, column-select + compare.
+  kernel/batched     : the `repro.api` difficulty backend
+                       (``--backend auto`` resolves to the fused Pallas
+                       kernel; interpret mode off-TPU) — ONE pass for the
+                       whole batch, all four metrics, column-select +
+                       compare.
 
 Sweeps B in {1, 64, 1024} x K in {50, 100, 200} (``--smoke``: a 30-second
 subset) and prints ``name,value,derived`` CSV rows like benchmarks/run.py.
-``--out`` appends the rows to a CSV for the perf trajectory across PRs.
+``--out`` appends the rows to a CSV; full default-config runs also write
+structured JSON to ``BENCH_routing_fastpath.json`` at the repo root —
+the perf trajectory tracked across PRs (``--json`` overrides the path;
+smoke / non-default sweeps don't touch the tracked file unless asked).
 
 Acceptance gate (asserted when the full grid runs): batched-kernel
 dispatch throughput >= 5x the per-request oracle at B=1024, K=100.
@@ -23,20 +28,24 @@ dispatch throughput >= 5x the per-request oracle at B=1024, K=100.
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import make_backend, resolve_backend_name
 from repro.core import skewness
-from repro.core.router import (RouterConfig, route_all_metrics,
-                               route_from_difficulty)
+from repro.core.router import RouterConfig, route_from_difficulty
 
 FULL_GRID = {"B": (1, 64, 1024), "K": (50, 100, 200)}
 SMOKE_GRID = {"B": (1, 64), "K": (50,)}
 GATE_SHAPE = (1024, 100)  # B, K of the acceptance assertion
 GATE_SPEEDUP = 5.0
+DEFAULT_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_routing_fastpath.json"
 
 
 def _desc_scores(rng, b, k) -> np.ndarray:
@@ -53,7 +62,7 @@ def _time_best(fn, iters: int) -> float:
     return best
 
 
-def bench_shape(b: int, k: int, config: RouterConfig,
+def bench_shape(b: int, k: int, config: RouterConfig, backend,
                 iters: int = 3, seed: int = 0) -> dict:
     rng = np.random.default_rng(seed)
     scores = _desc_scores(rng, b, k)
@@ -71,11 +80,11 @@ def bench_shape(b: int, k: int, config: RouterConfig,
         jax.block_until_ready(out)
         return out
 
-    # -- fused batched kernel path -------------------------------------------
+    # -- batched backend path ------------------------------------------------
     batch = jnp.asarray(scores)
 
     def batched():
-        res = route_all_metrics(batch, config)
+        res = backend.route_batch(batch, config)
         jax.block_until_ready(res.tiers)
         return res
 
@@ -94,21 +103,22 @@ def bench_shape(b: int, k: int, config: RouterConfig,
     }
 
 
-def run(grid: dict, iters: int = 3,
-        metric: str = "entropy") -> tuple[list[tuple], dict]:
+def run(grid: dict, iters: int = 3, metric: str = "entropy",
+        backend_name: str = "auto") -> tuple[list[tuple], dict]:
     """Returns (csv_rows, results keyed by (B, K))."""
     config = RouterConfig(metric=metric, thresholds=(5.0,))
+    backend = make_backend(backend_name)
     rows: list[tuple] = []
     results: dict = {}
     for k in grid["K"]:
         for b in grid["B"]:
-            r = bench_shape(b, k, config, iters=iters)
+            r = bench_shape(b, k, config, backend, iters=iters)
             results[(b, k)] = r
             tag = f"fastpath/B{b}_K{k}"
             rows.append((f"{tag}/oracle_qps", round(r["oracle_qps"], 1),
                          "per-request XLA oracle dispatch"))
             rows.append((f"{tag}/kernel_qps", round(r["kernel_qps"], 1),
-                         "fused batched kernel dispatch"))
+                         f"fused batched dispatch ({backend.name} backend)"))
             rows.append((f"{tag}/speedup", round(r["speedup"], 2),
                          "kernel_qps / oracle_qps"))
     return rows, results
@@ -121,15 +131,32 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--metric", default="entropy",
                     choices=["area", "cumulative", "entropy", "gini"])
+    ap.add_argument("--backend", default="auto",
+                    help="repro.api difficulty backend for the batched "
+                         "path (auto | pallas | oracle | registered name)")
     ap.add_argument("--out", default=None,
                     help="append CSV rows to this file (perf trajectory)")
+    ap.add_argument("--json", default=None,
+                    help="write structured results JSON here ('' disables); "
+                         "defaults to BENCH_routing_fastpath.json at the "
+                         "repo root for full default-config runs only, so "
+                         "smoke / non-default sweeps never clobber the "
+                         "tracked perf trajectory")
     args = ap.parse_args()
+
+    json_path = args.json
+    if json_path is None:
+        trajectory_run = (not args.smoke and args.metric == "entropy"
+                          and args.backend == "auto"
+                          and args.iters == ap.get_default("iters"))
+        json_path = str(DEFAULT_JSON) if trajectory_run else ""
 
     grid = SMOKE_GRID if args.smoke else FULL_GRID
     t0 = time.monotonic()
-    rows, results = run(grid, iters=args.iters, metric=args.metric)
-    rows.append(("fastpath/wall_s", round(time.monotonic() - t0, 1),
-                 "total bench wall time"))
+    rows, results = run(grid, iters=args.iters, metric=args.metric,
+                        backend_name=args.backend)
+    wall = time.monotonic() - t0
+    rows.append(("fastpath/wall_s", round(wall, 1), "total bench wall time"))
 
     for name, value, derived in rows:
         print(f"{name},{value},{derived}")
@@ -139,14 +166,45 @@ def main() -> None:
             for name, value, derived in rows:
                 f.write(f"{name},{value},{derived}\n")
 
+    gate = None
     if GATE_SHAPE in results:
         speedup = results[GATE_SHAPE]["speedup"]
-        assert speedup >= GATE_SPEEDUP, (
-            f"batched kernel dispatch only {speedup:.1f}x the per-request "
-            f"oracle at B={GATE_SHAPE[0]} K={GATE_SHAPE[1]} "
+        gate = {"shape": list(GATE_SHAPE),
+                "required_speedup": GATE_SPEEDUP,
+                "speedup": round(speedup, 2),
+                "passed": speedup >= GATE_SPEEDUP}
+
+    if json_path:
+        from repro.api.backends import default_interpret
+        payload = {
+            "bench": "routing_fastpath",
+            "metric": args.metric,
+            "backend": {
+                "requested": args.backend,
+                "resolved": resolve_backend_name(args.backend),
+                "interpret": default_interpret(),
+                "jax_backend": jax.default_backend(),
+            },
+            "grid": {"B": list(grid["B"]), "K": list(grid["K"])},
+            "results": [results[(b, k)]
+                        for k in grid["K"] for b in grid["B"]],
+            "gate": gate,
+            "smoke": args.smoke,
+            "iters": args.iters,
+            "wall_s": round(wall, 1),
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {json_path}")
+
+    if gate is not None:
+        assert gate["passed"], (
+            f"batched kernel dispatch only {gate['speedup']:.1f}x the "
+            f"per-request oracle at B={GATE_SHAPE[0]} K={GATE_SHAPE[1]} "
             f"(acceptance: >= {GATE_SPEEDUP}x)")
-        print(f"ACCEPT: batched fast path {speedup:.1f}x per-request oracle "
-              f"at B={GATE_SHAPE[0]}, K={GATE_SHAPE[1]}")
+        print(f"ACCEPT: batched fast path {gate['speedup']:.1f}x "
+              f"per-request oracle at B={GATE_SHAPE[0]}, K={GATE_SHAPE[1]}")
 
 
 if __name__ == "__main__":

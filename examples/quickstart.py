@@ -1,9 +1,13 @@
 """Quickstart: the full SkewRoute pipeline end-to-end in one script.
 
 Builds a small synthetic KG, trains the SubgraphRAG scorer, calibrates a
-training-free router to a 40% large-tier budget, and serves a handful of
-queries through two REAL (small-config) transformer tiers — tokens are
-actually generated by `repro.serving.engine`.
+training-free router to a 40% large-tier budget, and serves queries
+through two REAL (small-config) transformer tiers — everything routing-
+side goes through the declarative `repro.api` surface:
+
+    spec    = RouteSpec(...)          # the whole policy, as data
+    session = build(spec, runners=...)
+    session.submit(scores, prompts)   # route + micro-batch + generate
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,12 +15,12 @@ actually generated by `repro.serving.engine`.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import calibrate_threshold, RouterConfig
+from repro.api import RouteSpec, build
+from repro.core import calibrate_threshold
 from repro.models.layers import LMConfig
 from repro.retrieval import scorer as sc
 from repro.retrieval import synthetic
-from repro.serving.engine import make_engine
-from repro.serving.router_service import SkewRouteDispatcher
+from repro.serving.engine import EngineBank, make_engine
 
 
 def main():
@@ -34,34 +38,45 @@ def main():
         score_rows.append(np.pad(probs, (0, 100 - len(probs))))
     scores = jnp.asarray(np.stack(score_rows))
     theta = calibrate_threshold(scores, target_large_ratio=0.4, metric="gini")
-    router = RouterConfig(metric="gini", thresholds=(theta,))
     print(f"calibrated gini threshold: {theta:.4f} (40% large budget)")
 
-    # 3. Two real LM tiers ---------------------------------------------------
-    small = make_engine(LMConfig(name="small", n_layers=2, d_model=64,
-                                 n_heads=4, n_kv_heads=2, head_dim=16,
-                                 d_ff=128, vocab=512, dtype=jnp.float32))
-    large = make_engine(LMConfig(name="large", n_layers=4, d_model=128,
-                                 n_heads=8, n_kv_heads=4, head_dim=16,
-                                 d_ff=256, vocab=512, dtype=jnp.float32))
-    tiers = [small, large]
-    dispatcher = SkewRouteDispatcher(router, ["qwen7b", "qwen72b"])
+    # 3. The policy as one declarative, JSON-round-trippable spec ----------
+    spec = RouteSpec(metric="gini", thresholds=(theta,),
+                     tier_names=("qwen7b", "qwen72b"), micro_batch=4)
+    assert RouteSpec.from_json(spec.to_json()) == spec  # ships as bytes
 
-    # 4. Route + generate ----------------------------------------------------
+    # 4. Two real LM tiers behind the session ------------------------------
+    bank = EngineBank({
+        0: make_engine(LMConfig(name="small", n_layers=2, d_model=64,
+                                n_heads=4, n_kv_heads=2, head_dim=16,
+                                d_ff=128, vocab=512, dtype=jnp.float32)),
+        1: make_engine(LMConfig(name="large", n_layers=4, d_model=128,
+                                n_heads=8, n_kv_heads=4, head_dim=16,
+                                d_ff=256, vocab=512, dtype=jnp.float32)),
+    }, max_new=8)
+    session = build(spec, runners=bank)
+
+    # 5. Route + generate ---------------------------------------------------
     print("== serving ==")
-    for i, q in enumerate(data.queries[80:90]):
+    queries = data.queries[80:90]
+    batch_scores, prompts = [], []
+    for q in queries:
         _, probs = sc.retrieve(params, data.kg, data.entity_emb,
                                data.relation_emb, q, cfg)
-        rec = dispatcher.dispatch(probs)
-        prompt = np.abs(np.frombuffer(q.query_emb.tobytes(), np.uint8)[:24]
-                        ).astype(np.int32)[None, :] % 512
-        out = tiers[rec.tier].generate(prompt, max_new=8)
+        batch_scores.append(np.pad(probs, (0, 100 - len(probs))))
+        prompts.append(np.abs(np.frombuffer(q.query_emb.tobytes(),
+                                            np.uint8)[:24])
+                       .astype(np.int32) % 512)
+    res = session.submit(np.stack(batch_scores), prompts)
+    session.flush()  # drain partial micro-batches
+    for i, (q, rec) in enumerate(zip(queries, res.records)):
         print(f"q{i} hops={q.hops} difficulty={rec.difficulty:+.3f} -> "
-              f"tier {rec.tier} ({dispatcher.tier_names[rec.tier]}); "
-              f"generated {out.tokens.shape[1]} tokens")
-    s = dispatcher.stats
-    print(f"\nrouted {s.n_requests} requests; tier mix {s.tier_counts}; "
-          f"large ratio {s.large_call_ratio:.2f}; est cost ${s.total_cost:.6f}")
+              f"tier {rec.tier} ({session.tier_names[rec.tier]})")
+    generated = sum(b.result.generated_tokens for b in session.executed)
+    s = session.stats
+    print(f"\nrouted {s.n_requests} requests / generated {generated} tokens; "
+          f"tier mix {s.tier_counts}; large ratio {s.large_call_ratio:.2f}; "
+          f"est cost ${s.total_cost:.6f}")
 
 
 if __name__ == "__main__":

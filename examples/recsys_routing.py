@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RouterConfig, calibrate_threshold, route_binary
+from repro.api import RouteSpec, build
+from repro.core import calibrate_threshold
 from repro.models import recsys as rec
 
 
@@ -36,12 +37,14 @@ def main():
 
     theta = calibrate_threshold(scores_desc, target_large_ratio=0.3,
                                 metric="entropy")
-    router = RouterConfig(metric="entropy", thresholds=(theta,))
-    escalate = np.asarray(route_binary(scores_desc, router))
+    session = build(RouteSpec(metric="entropy", thresholds=(theta,),
+                              top_k=n_cand,
+                              tier_names=("deepfm-small", "dcnv2-large")))
+    res = session.route(np.asarray(scores_desc))
+    escalate = res.tiers > 0
     print(f"requests: {n_req}; escalated to the large ranker: "
           f"{escalate.sum()} ({escalate.mean():.0%}; budget 30%)")
-    ent = np.asarray(
-        __import__("repro.core.skewness", fromlist=["x"]).entropy_metric(scores_desc))
+    ent = res.difficulty  # metric="entropy": difficulty IS score-entropy
     print(f"mean score-entropy served-small: {ent[~escalate].mean():.3f} "
           f"vs escalated: {ent[escalate].mean():.3f}")
     assert ent[escalate].mean() > ent[~escalate].mean()

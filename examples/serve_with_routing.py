@@ -2,20 +2,21 @@
 straggler mitigation + cost telemetry under a simulated request stream.
 
 Demonstrates the serving-side deliverables working together: SkewRoute
-tier dispatch, per-tier replica pools, a replica failure mid-stream whose
-in-flight requests get re-dispatched, and the resulting cost/quality
-telemetry vs an all-large baseline.
+tier dispatch through the declarative `repro.api` session, per-tier
+replica pools, a replica failure mid-stream whose in-flight requests get
+re-dispatched, and the resulting cost/quality telemetry vs an all-large
+baseline.
 
   PYTHONPATH=src python examples/serve_with_routing.py
 """
 
 import numpy as np
 
-from repro.core import RouterConfig, calibrate_threshold
+from repro.api import RouteSpec, build
+from repro.core import calibrate_threshold
 from repro.core.cost import CostModel
 from repro.retrieval import scorer as sc
 from repro.retrieval import synthetic
-from repro.serving.router_service import SkewRouteDispatcher
 from repro.serving.scheduler import Replica, Request, TierScheduler
 
 
@@ -34,9 +35,8 @@ def main():
 
     import jax.numpy as jnp
     theta = calibrate_threshold(jnp.asarray(all_scores[:100]), 0.35, "entropy")
-    dispatcher = SkewRouteDispatcher(
-        RouterConfig(metric="entropy", thresholds=(theta,)),
-        ["qwen7b", "qwen72b"])
+    session = build(RouteSpec(metric="entropy", thresholds=(theta,),
+                              tier_names=("qwen7b", "qwen72b")))
 
     # replica pools: 4 small, 2 large (cost-proportional provisioning)
     pools = {
@@ -48,7 +48,7 @@ def main():
 
     now = 0.0
     for i, scores in enumerate(all_scores[100:220]):
-        rec = dispatcher.dispatch(scores)
+        rec = session.route_one(scores)
         req = Request(request_id=rec.request_id, tier=rec.tier,
                       prompt_len=1873, max_new=120,
                       deadline=now + 30.0, submitted_at=now)
@@ -71,7 +71,7 @@ def main():
             p.step(now)
 
     cm = CostModel()
-    stats = dispatcher.stats
+    stats = session.stats
     routed_cost = stats.total_cost
     all_large_cost = cm.request_cost("qwen72b") * stats.n_requests
     redispatched = sum(1 for p in pools.values() for r in p.done

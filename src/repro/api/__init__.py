@@ -1,0 +1,39 @@
+"""`repro.api` — the unified, declarative SkewRoute routing surface.
+
+The entire routing policy is one JSON-round-trippable value; running it
+is one call:
+
+    from repro.api import RouteSpec, build
+
+    spec = RouteSpec(metric="gini", thresholds=(theta,),
+                     tier_names=("qwen7b", "qwen72b"))
+    session = build(spec)                  # or build(spec, runners=bank)
+    result = session.route(scores_desc)    # [B, K] -> tiers + telemetry
+
+Policies ship between replicas as bytes (`spec.to_json()` /
+`RouteSpec.from_json`), live state ships as `session.snapshot()` /
+`restore()`. Difficulty computation is a named, registered backend
+(``oracle`` | ``pallas`` | ``auto``) — see `repro.api.backends`.
+"""
+
+from repro.api.backends import (  # noqa: F401
+    DifficultyBackend,
+    OracleBackend,
+    PallasBackend,
+    available_backends,
+    default_interpret,
+    make_backend,
+    register_backend,
+    resolve_backend_name,
+)
+from repro.api.spec import (  # noqa: F401
+    SCHEMA_VERSION,
+    CalibrationSpec,
+    CostSpec,
+    RouteSpec,
+)
+from repro.api.session import (  # noqa: F401
+    EngineBankLike,
+    SkewRouteSession,
+    build,
+)

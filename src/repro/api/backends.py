@@ -1,0 +1,163 @@
+"""Pluggable difficulty backends: ONE place that decides how skew metrics
+are computed.
+
+Before this module the interpret-vs-compiled choice and the oracle-vs-
+kernel choice were re-derived ad hoc wherever dispatch happened
+(`router_service`, `pipeline`, `launch/serve.py`). Now a
+:class:`DifficultyBackend` is a named, swappable policy object:
+
+* ``oracle`` — the readable XLA path (`repro.core.skewness`, via the
+  kernel's stacked ref). Ground truth; what offline evaluation wants.
+* ``pallas`` — the fused single-pass kernel
+  (`repro.kernels.skew_metrics`), interpret mode off-TPU.
+* ``auto``   — the fused ``pallas`` kernel, with the interpret-vs-
+  compiled choice made from device availability at CALL time
+  (:func:`default_interpret`): compiled on TPU, interpret mode
+  elsewhere (still one XLA computation per batch under jit).
+
+Every backend produces the SAME contract: ``[B, K]`` descending-sorted
+scores (+ optional ``[B]`` ``n_valid``) -> a full
+:class:`~repro.core.router.RouteBatchResult` with the raw ``[B, 4]``
+metric matrix in kernel column order, so the configured metric is always
+a column select — never a recompile — regardless of backend.
+
+Third-party backends (e.g. a mesh-sharded dispatch path, the ROADMAP's
+next step) register with :func:`register_backend` and become selectable
+from a :class:`~repro.api.spec.RouteSpec` by name.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.router import (RouteBatchResult, RouterConfig,
+                               difficulty_from_metrics, route_from_difficulty)
+
+
+def default_interpret() -> bool:
+    """The one canonical device-availability check: Pallas kernels run
+    compiled on TPU and in interpret mode everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
+@runtime_checkable
+class DifficultyBackend(Protocol):
+    """Computes skew metrics + tier assignments for score batches."""
+
+    name: str
+
+    def metrics(self, scores_desc: jax.Array,
+                p_cdf: float = 0.95,
+                n_valid: Optional[jax.Array] = None) -> jax.Array:
+        """[B, K] descending scores -> [B, 4] raw metrics (kernel order)."""
+        ...
+
+    def route_batch(self, scores_desc: jax.Array, config: RouterConfig,
+                    n_valid: Optional[jax.Array] = None) -> RouteBatchResult:
+        """[B, K] -> tiers/difficulty/metrics under ``config``."""
+        ...
+
+
+def _route_from_metrics(metrics: jax.Array,
+                        config: RouterConfig) -> RouteBatchResult:
+    diff = difficulty_from_metrics(metrics, config.metric)
+    tiers = route_from_difficulty(diff, jnp.asarray(config.thresholds))
+    return RouteBatchResult(tiers=tiers, difficulty=diff, metrics=metrics)
+
+
+@functools.partial(jax.jit, static_argnames=("p_cdf", "ragged"))
+def _oracle_metrics(scores_desc: jax.Array, p_cdf: float,
+                    n_valid: Optional[jax.Array], ragged: bool) -> jax.Array:
+    from repro.kernels.skew_metrics.ref import (mask_from_n_valid,
+                                                skew_metrics_ref)
+    mask = (mask_from_n_valid(n_valid, scores_desc.shape[-1])
+            if ragged else None)
+    return skew_metrics_ref(scores_desc, p_cdf=p_cdf, mask=mask)
+
+
+class OracleBackend:
+    """XLA ground-truth backend (`core.skewness` metrics, stacked)."""
+
+    name = "oracle"
+
+    def metrics(self, scores_desc, p_cdf: float = 0.95, n_valid=None):
+        scores = jnp.atleast_2d(jnp.asarray(scores_desc))
+        return _oracle_metrics(scores, p_cdf,
+                               None if n_valid is None else jnp.asarray(n_valid),
+                               ragged=n_valid is not None)
+
+    def route_batch(self, scores_desc, config: RouterConfig, n_valid=None):
+        return _route_from_metrics(
+            self.metrics(scores_desc, config.cumulative_p, n_valid), config)
+
+
+class PallasBackend:
+    """Fused single-pass kernel backend (`kernels.skew_metrics`).
+
+    ``interpret=None`` defers to :func:`default_interpret` at call time,
+    so a backend object built off-TPU keeps working if devices change.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        self.interpret = interpret
+
+    def metrics(self, scores_desc, p_cdf: float = 0.95, n_valid=None):
+        from repro.kernels.skew_metrics import ops as skew_ops
+        scores = jnp.atleast_2d(jnp.asarray(scores_desc))
+        return skew_ops.skew_metrics(
+            scores, p_cdf=p_cdf,
+            n_valid=None if n_valid is None else jnp.asarray(n_valid),
+            interpret=self.interpret)
+
+    def route_batch(self, scores_desc, config: RouterConfig, n_valid=None):
+        from repro.core.router import route_all_metrics
+        return route_all_metrics(
+            jnp.atleast_2d(jnp.asarray(scores_desc)), config,
+            n_valid=None if n_valid is None else jnp.asarray(n_valid),
+            interpret=self.interpret)
+
+
+# --- registry ----------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[..., DifficultyBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Callable[..., DifficultyBackend]) -> None:
+    """Register a backend factory under ``name`` (RouteSpec-selectable)."""
+    if not name or name == "auto":
+        raise ValueError(f"invalid backend name {name!r}")
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY)) + ("auto",)
+
+
+def resolve_backend_name(name: str = "auto") -> str:
+    """``auto`` is an alias for ``pallas``; the actual device decision
+    (compiled vs interpret) happens at call time via
+    :func:`default_interpret`, not here."""
+    return "pallas" if name == "auto" else name
+
+
+def make_backend(name: str = "auto", **kwargs) -> DifficultyBackend:
+    """Instantiate a difficulty backend by name (``auto`` = the fused
+    kernel with call-time interpret fallback — see module docstring)."""
+    concrete = resolve_backend_name(name)
+    try:
+        factory = _REGISTRY[concrete]
+    except KeyError:
+        raise ValueError(f"unknown difficulty backend {name!r}; "
+                         f"choose from {available_backends()}") from None
+    return factory(**kwargs)
+
+
+register_backend("oracle", OracleBackend)
+register_backend("pallas", PallasBackend)

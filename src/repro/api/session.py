@@ -1,0 +1,269 @@
+"""`SkewRouteSession`: the one blessed serving facade.
+
+``session = repro.api.build(spec)`` composes everything the old surface
+made callers hand-wire across four modules — threshold router, difficulty
+backend, streaming calibrator, micro-batch queues, engine-bank runners,
+cost telemetry — behind three verbs:
+
+* ``session.route(scores)``          — batched tier assignment (fast path)
+* ``session.submit(scores, items)``  — route AND pump per-tier micro-
+  batches through the tier runners (needs ``runners=`` at build time)
+* ``session.snapshot()/restore()``   — the complete mutable routing state
+  (hot-swapped thresholds, calibrator window, telemetry counters) as a
+  JSON-serializable dict, so multi-replica deployments can ship policy
+  AND state as bytes.
+
+The session owns no novel logic: it builds the same
+:class:`~repro.serving.router_service.SkewRouteDispatcher` /
+:class:`~repro.serving.pipeline.ServingPipeline` internals (suppressing
+their deprecation shims), which keeps the old API importable during the
+migration window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import warnings
+from typing import (Callable, Mapping, Optional, Protocol, Sequence, Union,
+                    runtime_checkable)
+
+import numpy as np
+
+from repro.api import backends as _backends
+from repro.api.spec import SCHEMA_VERSION, RouteSpec
+from repro.serving import _deprecation
+from repro.serving.pipeline import PipelineTelemetry, ServingPipeline
+from repro.serving.router_service import (BatchDispatchResult, DispatchRecord,
+                                          SkewRouteDispatcher)
+
+Runners = Mapping[int, Callable[[list], object]]
+
+
+@runtime_checkable
+class EngineBankLike(Protocol):
+    """Anything exporting per-tier runner callables (e.g. an
+    :class:`~repro.serving.engine.EngineBank`)."""
+
+    def runners(self) -> Runners: ...
+
+
+class SkewRouteSession:
+    """A running routing policy built from a :class:`RouteSpec`."""
+
+    def __init__(self, spec: RouteSpec,
+                 runners: Optional[Union[Runners, EngineBankLike]] = None):
+        self.spec = spec
+        self.backend = _backends.make_backend(spec.backend)
+        # One facade-level lock makes session verbs atomic w.r.t. each
+        # other (the dispatcher's internal lock only covers its own
+        # counters, not the pipeline queues a concurrent submit mutates).
+        self._lock = threading.RLock()
+        with _deprecation.suppress():
+            self.dispatcher = SkewRouteDispatcher(
+                spec.router_config(), spec.models(),
+                cost_model=spec.cost_model(), backend=self.backend)
+            cal = spec.calibration
+            if cal.policy == "streaming":
+                self.dispatcher.attach_calibrator(
+                    cal.target_shares, window=cal.window,
+                    min_samples=cal.min_samples, tolerance=cal.tolerance,
+                    cooldown=cal.cooldown)
+            self.pipeline: Optional[ServingPipeline] = None
+            if runners is not None:
+                if isinstance(runners, EngineBankLike):
+                    runners = runners.runners()
+                self.pipeline = ServingPipeline(
+                    self.dispatcher, dict(runners),
+                    micro_batch=spec.micro_batch)
+
+    # -- views ----------------------------------------------------------------
+
+    @property
+    def tier_names(self) -> tuple[str, ...]:
+        return self.spec.tier_names
+
+    @property
+    def thresholds(self) -> tuple[float, ...]:
+        """CURRENT thresholds (may differ from the spec after hot-swaps)."""
+        return self.dispatcher.router.thresholds
+
+    @property
+    def stats(self):
+        return self.dispatcher.stats
+
+    @property
+    def calibrator(self):
+        return self.dispatcher.calibrator
+
+    @property
+    def executed(self) -> list:
+        """Micro-batches run so far (`ExecutedBatch` telemetry objects);
+        empty for runner-less sessions — the facade-safe way to reach
+        per-batch runner results without touching pipeline internals."""
+        return [] if self.pipeline is None else list(self.pipeline.executed)
+
+    def current_spec(self) -> RouteSpec:
+        """The spec as-of-now: original policy + live thresholds. Ship
+        ``session.current_spec().to_json()`` to bring up a replica that
+        starts from this session's calibration point."""
+        return self.spec.with_thresholds(self.thresholds)
+
+    # -- routing --------------------------------------------------------------
+
+    def route(self, scores_desc: np.ndarray,
+              n_valid: Optional[np.ndarray] = None) -> BatchDispatchResult:
+        """[B, K] descending top-K scores -> full dispatch result (tiers,
+        difficulty, all four metrics, per-request records)."""
+        return self.dispatcher.dispatch_batch(
+            np.atleast_2d(np.asarray(scores_desc)), n_valid=n_valid,
+            return_details=True)
+
+    def route_one(self, scores_desc: np.ndarray,
+                  n_valid: Optional[int] = None) -> DispatchRecord:
+        """One request (same fused path, batch of one)."""
+        return self.dispatcher.dispatch(scores_desc, n_valid=n_valid)
+
+    def submit(self, scores_desc: np.ndarray,
+               payloads: Optional[Sequence] = None,
+               n_valid: Optional[np.ndarray] = None) -> BatchDispatchResult:
+        """Route a batch and pump full per-tier micro-batches through the
+        tier runners. Requires the session to be built with ``runners=``."""
+        if self.pipeline is None:
+            raise RuntimeError(
+                "session was built without runners; pass runners= (a "
+                "{tier: callable} dict or an EngineBank) to repro.api.build "
+                "to use submit()")
+        with self._lock:
+            return self.pipeline.submit(
+                np.atleast_2d(np.asarray(scores_desc)),
+                payloads=payloads, n_valid=n_valid)
+
+    def flush(self) -> int:
+        """Drain partial micro-batches; returns requests executed."""
+        with self._lock:
+            return 0 if self.pipeline is None else self.pipeline.flush()
+
+    def telemetry(self) -> dict:
+        """Merged dispatcher + pipeline counters (JSON-friendly)."""
+        s = self.dispatcher.stats
+        out = {
+            "backend": self.backend.name,
+            "thresholds": list(self.thresholds),
+            **s.state_dict(),
+            "large_call_ratio": s.large_call_ratio,
+        }
+        if self.pipeline is not None:
+            out["pipeline"] = self.pipeline.stats()
+        return out
+
+    # -- serializable state ---------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """The session's complete mutable state as a JSON-serializable dict.
+
+        Covers the live thresholds, dispatcher telemetry, and the
+        streaming calibrator's exact window (ring buffer, cursor, swap
+        history) — :meth:`restore` rebuilds all of it bit-exactly.
+        Pending micro-batch payloads are arbitrary Python objects and are
+        NOT serializable: ``flush()`` before snapshotting.
+        """
+        # the session lock serializes against submit(); the dispatcher
+        # lock against direct old-API dispatch_batch() callers
+        with self._lock:
+            if self.pipeline is not None:
+                depths = {t: len(q) for t, q in self.pipeline.queues.items()
+                          if len(q)}
+                if depths:
+                    raise RuntimeError(
+                        f"cannot snapshot with pending micro-batch payloads "
+                        f"(queue depths {depths}); call flush() first")
+            d = self.dispatcher
+            with d._lock:
+                snap = {
+                    "schema_version": SCHEMA_VERSION,
+                    "spec": self.spec.to_dict(),
+                    "thresholds": list(d.router.thresholds),
+                    "next_id": d._next_id,
+                    "stats": d.stats.state_dict(),
+                    "calibrator": (None if d.calibrator is None
+                                   else d.calibrator.state_dict()),
+                    "pipeline": None,
+                }
+            if self.pipeline is not None:
+                snap["pipeline"] = self.pipeline.telemetry.state_dict()
+            return snap
+
+    def restore(self, snap: Mapping) -> "SkewRouteSession":
+        """Load a :meth:`snapshot` back into this session (in place).
+
+        The snapshot must come from a session with an IDENTICAL spec —
+        restoring state across different policies is a category error the
+        spec equality check turns into a loud one.
+        """
+        if snap.get("schema_version") != SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported snapshot schema_version "
+                f"{snap.get('schema_version')!r}; this build understands "
+                f"version {SCHEMA_VERSION}")
+        if snap["spec"] != self.spec.to_dict():
+            raise ValueError("snapshot was taken under a different "
+                             "RouteSpec; build a session from "
+                             "RouteSpec.from_dict(snapshot['spec']) instead")
+        with self._lock:
+            return self._restore_locked(snap)
+
+    def _restore_locked(self, snap: Mapping) -> "SkewRouteSession":
+        if self.pipeline is not None:
+            depths = {t: len(q) for t, q in self.pipeline.queues.items()
+                      if len(q)}
+            if depths:
+                raise RuntimeError(
+                    f"cannot restore over pending micro-batch payloads "
+                    f"(queue depths {depths}); call flush() first")
+            # executed-batch history must match the restored counters
+            self.pipeline.executed.clear()
+        d = self.dispatcher
+        with d._lock:
+            d.router = dataclasses.replace(
+                d.router, thresholds=tuple(snap["thresholds"]))
+            d._next_id = int(snap["next_id"])
+            d.stats.load_state_dict(snap["stats"])
+            cal_snap = snap.get("calibrator")
+            if (cal_snap is None) != (d.calibrator is None):
+                raise ValueError("snapshot and session disagree on whether "
+                                 "a streaming calibrator is attached")
+            if cal_snap is not None:
+                d.calibrator.load_state_dict(cal_snap)
+                d.router = d.calibrator.config
+        # pipeline presence may legitimately differ (runners are runtime,
+        # not policy) — but state must never silently cross the gap
+        pipe_snap = snap.get("pipeline")
+        if pipe_snap is not None and self.pipeline is None:
+            warnings.warn(
+                "snapshot carries pipeline telemetry but this session "
+                "was built without runners; those counters are not "
+                "restored", stacklevel=3)
+        elif self.pipeline is not None:
+            if pipe_snap is None:
+                warnings.warn(
+                    "snapshot has no pipeline telemetry; this session's "
+                    "pipeline counters are reset to zero", stacklevel=3)
+                pipe_snap = PipelineTelemetry(
+                    tier_counts={t: 0 for t in self.pipeline.queues}
+                ).state_dict()
+            self.pipeline.telemetry.load_state_dict(pipe_snap)
+        return self
+
+    @classmethod
+    def from_snapshot(cls, snap: Mapping,
+                      runners: Optional[Runners] = None) -> "SkewRouteSession":
+        """Stand up a replica directly from another session's snapshot."""
+        session = cls(RouteSpec.from_dict(snap["spec"]), runners=runners)
+        return session.restore(snap)
+
+
+def build(spec: RouteSpec,
+          runners: Optional[Runners] = None) -> SkewRouteSession:
+    """The one entry point: declarative spec -> running session."""
+    return SkewRouteSession(spec, runners=runners)

@@ -44,6 +44,11 @@ class RouterConfig:
         if self.metric not in skewness.METRICS:
             raise ValueError(f"unknown metric {self.metric!r}; "
                              f"choose from {sorted(skewness.METRICS)}")
+        if self.top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {self.top_k}")
+        if not 0.0 < self.cumulative_p <= 1.0:
+            raise ValueError(f"cumulative_p must be in (0, 1], "
+                             f"got {self.cumulative_p}")
         if len(self.thresholds) < 1:
             raise ValueError("need at least one threshold (two tiers)")
         ts = tuple(float(t) for t in self.thresholds)

@@ -73,6 +73,33 @@ class SlidingWindow:
             raise ValueError("empty window has no quantiles")
         return np.quantile(self._buf[:len(self)], q)
 
+    # -- serializable state (exact: restores the ring bit-for-bit) -----------
+
+    def state_dict(self) -> dict:
+        return {"capacity": self.capacity,
+                "buffer": [float(x) for x in self._buf[:len(self)]],
+                "head": self._head,
+                "total_seen": self._n}
+
+    def load_state_dict(self, state: dict) -> None:
+        # the ring layout (head/wrap positions) only makes sense at the
+        # capacity it was recorded under — cross-capacity restores would
+        # corrupt sample order or read uninitialized slots
+        if int(state["capacity"]) != self.capacity:
+            raise ValueError(
+                f"window state mismatch: state from a capacity-"
+                f"{int(state['capacity'])} window cannot restore into a "
+                f"capacity-{self.capacity} window")
+        buf = np.asarray(state["buffer"], np.float32)
+        n = int(state["total_seen"])
+        if buf.size != min(n, self.capacity):
+            raise ValueError(
+                f"window state mismatch: {buf.size} samples with "
+                f"total_seen={n} (expected {min(n, self.capacity)})")
+        self._buf[:buf.size] = buf
+        self._head = int(state["head"])
+        self._n = n
+
 
 @dataclasses.dataclass(frozen=True)
 class DriftEvent:
@@ -181,3 +208,29 @@ class StreamingCalibrator:
     @property
     def n_swaps(self) -> int:
         return len(self.events)
+
+    # -- serializable state ---------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """The calibrator's complete mutable state as JSON-friendly data
+        (thresholds, exact sample window, swap history). Knobs/targets are
+        NOT included — they are policy, carried by the config/spec."""
+        return {
+            "thresholds": list(self.config.thresholds),
+            "window": self.window.state_dict(),
+            "last_swap_at": self._last_swap_at,
+            "events": [dataclasses.asdict(e) for e in self.events],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.config = dataclasses.replace(
+            self.config, thresholds=tuple(state["thresholds"]))
+        self.window.load_state_dict(state["window"])
+        self._last_swap_at = int(state["last_swap_at"])
+        self.events = [
+            DriftEvent(at_sample=int(e["at_sample"]),
+                       observed_shares=tuple(e["observed_shares"]),
+                       target_shares=tuple(e["target_shares"]),
+                       old_thresholds=tuple(e["old_thresholds"]),
+                       new_thresholds=tuple(e["new_thresholds"]))
+            for e in state["events"]]

@@ -3,8 +3,12 @@
   PYTHONPATH=src python -m repro.launch.serve --requests 40 [--budget 0.4]
 
 Runs the paper's deployment shape end to end on small-config tiers:
-retrieval scoring -> fused skew metrics -> calibrated threshold routing ->
-per-tier engines generating real tokens, with cost/latency telemetry.
+retrieval scoring -> declarative `repro.api.RouteSpec` -> one
+`SkewRouteSession` (fused skew metrics, calibrated threshold routing,
+drift-aware streaming recalibration, per-tier micro-batch queues) ->
+engines generating real tokens, with cost/latency telemetry. The policy
+is pure data: the driver prints the spec JSON a replica would need to
+run the identical router.
 On TPU the tier configs switch to the assigned archs (yi-6b small /
 gemma-7b medium / internlm2-20b large) on the production mesh.
 """
@@ -27,13 +31,12 @@ def main() -> None:
                     choices=["area", "cumulative", "entropy", "gini"])
     args = ap.parse_args()
 
-    from repro.core import RouterConfig, calibrate_threshold
+    from repro.api import CalibrationSpec, RouteSpec, build
+    from repro.core import calibrate_threshold
     from repro.models.layers import LMConfig
     from repro.retrieval import scorer as sc
     from repro.retrieval import synthetic
     from repro.serving.engine import EngineBank, make_engine
-    from repro.serving.pipeline import ServingPipeline
-    from repro.serving.router_service import SkewRouteDispatcher
 
     print("== retrieval stack ==")
     data = synthetic.make_dataset("cwq", n_queries=args.requests + 100,
@@ -52,12 +55,18 @@ def main() -> None:
     calib_mask = np.arange(100)[None, :] < calib_nv[:, None]
     theta = calibrate_threshold(jnp.asarray(np.stack(calib)), args.budget,
                                 args.metric, mask=jnp.asarray(calib_mask))
-    dispatcher = SkewRouteDispatcher(
-        RouterConfig(metric=args.metric, thresholds=(theta,)),
-        ["qwen7b", "qwen72b"])
-    dispatcher.attach_calibrator([1.0 - args.budget, args.budget],
-                                 window=1024, min_samples=64)
+
+    # the WHOLE policy, declaratively — ship spec.to_json() to replicas
+    spec = RouteSpec(
+        metric=args.metric, thresholds=(theta,),
+        tier_names=("qwen7b", "qwen72b"),
+        backend="auto", micro_batch=8,
+        calibration=CalibrationSpec(
+            policy="streaming",
+            target_shares=(1.0 - args.budget, args.budget),
+            window=1024, min_samples=64))
     print(f"{args.metric} threshold {theta:.4f} for {args.budget:.0%} budget")
+    print(f"policy: {spec.to_json()}")
 
     print("== tier engines ==")
     bank = EngineBank({
@@ -68,7 +77,7 @@ def main() -> None:
                                 n_heads=8, n_kv_heads=4, head_dim=16,
                                 d_ff=256, vocab=512, dtype=jnp.float32)),
     }, max_new=8)
-    pipe = ServingPipeline(dispatcher, bank.runners(), micro_batch=8)
+    session = build(spec, runners=bank)
 
     t0 = time.monotonic()
     batch_scores, batch_nv, batch_prompts = [], [], []
@@ -81,26 +90,33 @@ def main() -> None:
             np.abs(np.frombuffer(q.query_emb.tobytes(), np.uint8)[:16])
             .astype(np.int32) % 512)
         if len(batch_scores) == 16:  # request-batch granularity of dispatch
-            pipe.submit(np.stack(batch_scores), batch_prompts,
-                        n_valid=np.asarray(batch_nv, np.int32))
+            session.submit(np.stack(batch_scores), batch_prompts,
+                           n_valid=np.asarray(batch_nv, np.int32))
             batch_scores, batch_nv, batch_prompts = [], [], []
     if batch_scores:
-        pipe.submit(np.stack(batch_scores), batch_prompts,
-                    n_valid=np.asarray(batch_nv, np.int32))
-    pipe.flush()
+        session.submit(np.stack(batch_scores), batch_prompts,
+                       n_valid=np.asarray(batch_nv, np.int32))
+    session.flush()
     wall = time.monotonic() - t0
 
-    generated = sum(b.result.generated_tokens for b in pipe.executed)
-    s = dispatcher.stats
+    generated = sum(b.result.generated_tokens for b in session.executed)
+    s = session.stats
     from repro.core.cost import CostModel
     cm = CostModel()
     all_large = cm.request_cost("qwen72b") * s.n_requests
+    n_micro = session.telemetry()["pipeline"]["n_microbatches"]
     print(f"\nserved {s.n_requests} requests / {generated} tokens in "
-          f"{wall:.1f}s over {pipe.telemetry.n_microbatches} micro-batches; "
+          f"{wall:.1f}s over {n_micro} micro-batches; "
           f"tier mix {s.tier_counts} (large ratio {s.large_call_ratio:.2f}); "
           f"{s.n_recalibrations} drift recalibrations")
     print(f"est. cost ${s.total_cost:.4f} vs all-large ${all_large:.4f} "
           f"({100 * (1 - s.total_cost / all_large):.0f}% saved)")
+    # hand-off artifact: this session's live state, as bytes
+    snap = session.snapshot()
+    cal_state = snap["calibrator"] or {"window": {"buffer": []}}
+    print(f"snapshot: thresholds={snap['thresholds']}, "
+          f"{len(cal_state['window']['buffer'])} window samples — "
+          f"restorable via SkewRouteSession.from_snapshot")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.serving import _deprecation
 from repro.serving.router_service import (BatchDispatchResult,
                                           SkewRouteDispatcher)
 from repro.serving.scheduler import MicroBatchQueue
@@ -50,14 +51,30 @@ class PipelineTelemetry:
     tier_counts: dict = dataclasses.field(default_factory=dict)
 
     def snapshot(self, queues: dict[int, MicroBatchQueue]) -> dict:
+        state = self.state_dict()
+        state["tier_counts"] = {int(t): c
+                                for t, c in state["tier_counts"].items()}
+        state["queue_depths"] = {t: len(q) for t, q in queues.items()}
+        return state
+
+    # -- serializable state (the single source of the counter list) ----------
+
+    def state_dict(self) -> dict:
         return {
             "n_submitted": self.n_submitted,
             "n_executed": self.n_executed,
             "n_microbatches": self.n_microbatches,
             "n_recalibrations": self.n_recalibrations,
-            "tier_counts": dict(self.tier_counts),
-            "queue_depths": {t: len(q) for t, q in queues.items()},
+            "tier_counts": {str(t): c for t, c in self.tier_counts.items()},
         }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.n_submitted = int(state["n_submitted"])
+        self.n_executed = int(state["n_executed"])
+        self.n_microbatches = int(state["n_microbatches"])
+        self.n_recalibrations = int(state["n_recalibrations"])
+        self.tier_counts = {int(t): int(c)
+                            for t, c in state["tier_counts"].items()}
 
 
 class ServingPipeline:
@@ -66,6 +83,11 @@ class ServingPipeline:
     def __init__(self, dispatcher: SkewRouteDispatcher,
                  runners: dict[int, Callable[[list], object]],
                  micro_batch: int = 8):
+        _deprecation.warn_once(
+            "ServingPipeline",
+            "hand-wiring ServingPipeline is deprecated; declare the policy "
+            "as a repro.api.RouteSpec and call repro.api.build(spec, "
+            "runners=...) (see README 'Routing fast path')")
         n_tiers = dispatcher.router.n_tiers
         missing = set(range(n_tiers)) - set(runners)
         if missing:
@@ -106,14 +128,16 @@ class ServingPipeline:
                              f"{len(payloads)} payloads")
         res: BatchDispatchResult = self.dispatcher.dispatch_batch(
             scores, n_valid=n_valid, return_details=True)
+        # per-request records are lazy; only build them when they ARE the
+        # payloads — with explicit payloads the tier array is all we need
         items = payloads if payloads is not None else res.records
         self.telemetry.n_submitted += len(items)
         if res.recalibrated:
             self.telemetry.n_recalibrations += 1
-        for rec, item in zip(res.records, items):
-            self.telemetry.tier_counts[rec.tier] += 1
-            for full in self.queues[rec.tier].push(item):
-                self._run(rec.tier, full)
+        for tier, item in zip(res.tiers.tolist(), items):
+            self.telemetry.tier_counts[tier] += 1
+            for full in self.queues[tier].push(item):
+                self._run(tier, full)
         return res
 
     def flush(self) -> int:

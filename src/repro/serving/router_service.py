@@ -5,9 +5,10 @@ FUSED fast path. Per batch:
 
   1. the retrieval stage hands over the top-K triple scores (descending,
      optionally ragged via per-row ``n_valid``);
-  2. ONE fused Pallas pass (``core.router.route_all_metrics``; interpret
-     mode off-TPU) computes all four difficulty metrics — the configured
-     metric is a column select, never a recompile;
+  2. the attached :class:`repro.api.backends.DifficultyBackend` (fused
+     Pallas pass by default — ``auto``; interpret mode off-TPU) computes
+     all four difficulty metrics in one call — the configured metric is
+     a column select, never a recompile;
   3. the threshold router picks tiers; telemetry (tier counts, expected
      $ cost, mean difficulty) streams to the stats sink;
   4. difficulty samples feed the attached streaming calibrator
@@ -28,6 +29,7 @@ operationalized.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import threading
 from typing import Optional, Sequence
 
@@ -36,9 +38,9 @@ import numpy as np
 
 from repro.core.calibrate import calibrate_multi_tier
 from repro.core.cost import CostModel
-from repro.core.router import (RouteBatchResult, RouterConfig,
-                               route_all_metrics)
+from repro.core.router import RouteBatchResult, RouterConfig
 from repro.core.streaming_calibrate import StreamingCalibrator
+from repro.serving import _deprecation
 from repro.serving.scheduler import bucket_size
 
 BATCH_BUCKETS = (8, 64, 256, 1024, 4096)
@@ -54,13 +56,27 @@ class DispatchRecord:
 
 @dataclasses.dataclass
 class BatchDispatchResult:
-    """Per-batch fast-path output plus what the control plane did with it."""
+    """Per-batch fast-path output plus what the control plane did with it.
 
-    records: list[DispatchRecord]
+    ``records`` is built lazily on first access: array-only consumers
+    (telemetry, the recsys example, bulk routing) never pay the
+    per-request Python object loop.
+    """
+
     tiers: np.ndarray         # [B] int32
     difficulty: np.ndarray    # [B] float32
     metrics: np.ndarray       # [B, 4] float32 (area, cum_k, entropy, gini)
+    first_id: int = 0
+    metric: str = ""
     recalibrated: bool = False
+
+    @functools.cached_property
+    def records(self) -> list[DispatchRecord]:
+        return [DispatchRecord(request_id=self.first_id + i,
+                               tier=int(self.tiers[i]),
+                               difficulty=float(self.difficulty[i]),
+                               metric=self.metric)
+                for i in range(len(self.tiers))]
 
 
 @dataclasses.dataclass
@@ -79,14 +95,46 @@ class DispatcherStats:
         top = max(self.tier_counts) if self.tier_counts else 0
         return self.tier_counts.get(top, 0) / self.n_requests
 
+    # -- serializable state (the single source of the counter list) ----------
+
+    def state_dict(self) -> dict:
+        return {
+            "n_requests": self.n_requests,
+            "n_batches": self.n_batches,
+            "n_recalibrations": self.n_recalibrations,
+            "tier_counts": {str(t): c for t, c in self.tier_counts.items()},
+            "total_cost": self.total_cost,
+            "mean_difficulty": self.mean_difficulty,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.n_requests = int(state["n_requests"])
+        self.n_batches = int(state["n_batches"])
+        self.n_recalibrations = int(state["n_recalibrations"])
+        self.tier_counts = {int(t): int(c)
+                            for t, c in state["tier_counts"].items()}
+        self.total_cost = float(state["total_cost"])
+        self.mean_difficulty = float(state["mean_difficulty"])
+
 
 class SkewRouteDispatcher:
     def __init__(self, router: RouterConfig, tier_names: Sequence[str],
                  cost_model: Optional[CostModel] = None,
-                 calibrator: Optional[StreamingCalibrator] = None):
+                 calibrator: Optional[StreamingCalibrator] = None,
+                 backend=None):
+        _deprecation.warn_once(
+            "SkewRouteDispatcher",
+            "hand-wiring SkewRouteDispatcher is deprecated; declare the "
+            "policy as a repro.api.RouteSpec and call repro.api.build(spec) "
+            "(see README 'Routing fast path')")
         if len(tier_names) != router.n_tiers:
             raise ValueError(f"{router.n_tiers} tiers but "
                              f"{len(tier_names)} tier names")
+        if backend is None:
+            # lazy import: repro.api composes this class, not vice versa
+            from repro.api.backends import make_backend
+            backend = make_backend("auto")
+        self.backend = backend
         self.router = router
         self.tier_names = list(tier_names)
         self.cost_model = cost_model or CostModel()
@@ -151,7 +199,7 @@ class SkewRouteDispatcher:
         if n_valid is not None:
             nv[:b] = np.asarray(n_valid, np.int32)
         nv[b:] = 1  # padded rows: degenerate but well-defined
-        result: RouteBatchResult = route_all_metrics(
+        result: RouteBatchResult = self.backend.route_batch(
             jnp.asarray(scores), self.router, n_valid=jnp.asarray(nv))
         tiers = np.asarray(result.tiers)[:b]
         diff = np.asarray(result.difficulty)[:b]
@@ -159,6 +207,7 @@ class SkewRouteDispatcher:
 
         recalibrated = False
         with self._lock:
+            metric_name = self.router.metric
             first_id = self._next_id
             self._next_id += b
             counts = np.bincount(tiers, minlength=self.router.n_tiers)
@@ -185,10 +234,7 @@ class SkewRouteDispatcher:
 
         if not return_details:
             return tiers
-        records = [DispatchRecord(request_id=first_id + i, tier=int(tiers[i]),
-                                  difficulty=float(diff[i]),
-                                  metric=self.router.metric)
-                   for i in range(b)]
-        return BatchDispatchResult(records=records, tiers=tiers,
-                                   difficulty=diff, metrics=metrics,
+        return BatchDispatchResult(tiers=tiers, difficulty=diff,
+                                   metrics=metrics, first_id=first_id,
+                                   metric=metric_name,
                                    recalibrated=recalibrated)
