@@ -13,11 +13,17 @@ is one call:
 Policies ship between replicas as bytes (`spec.to_json()` /
 `RouteSpec.from_json`), live state ships as `session.snapshot()` /
 `restore()`. Difficulty computation is a named, registered backend
-(``oracle`` | ``pallas`` | ``auto``) — see `repro.api.backends`.
+(``oracle`` | ``pallas`` | ``fused`` | ``auto``) — see
+`repro.api.backends`; ``auto`` is the production batch-size crossover
+(oracle below ``spec.crossover_batch``, the fused end-to-end kernels at
+or above it).
 """
 
 from repro.api.backends import (  # noqa: F401
+    DEFAULT_CROSSOVER_BATCH,
+    AutoBackend,
     DifficultyBackend,
+    FusedBackend,
     OracleBackend,
     PallasBackend,
     available_backends,

@@ -7,13 +7,28 @@ kernel choice were re-derived ad hoc wherever dispatch happened
 :class:`DifficultyBackend` is a named, swappable policy object:
 
 * ``oracle`` — the readable XLA path (`repro.core.skewness`, via the
-  kernel's stacked ref). Ground truth; what offline evaluation wants.
-* ``pallas`` — the fused single-pass kernel
+  kernel's stacked ref), still fused into ONE jitted decision program
+  per batch. Ground truth; what offline evaluation wants — and the
+  fastest path at small batch sizes, where Pallas launch/interpret
+  overhead dominates.
+* ``pallas`` — the fused single-pass skew kernel
   (`repro.kernels.skew_metrics`), interpret mode off-TPU.
-* ``auto``   — the fused ``pallas`` kernel, with the interpret-vs-
-  compiled choice made from device availability at CALL time
-  (:func:`default_interpret`): compiled on TPU, interpret mode
-  elsewhere (still one XLA computation per batch under jit).
+* ``fused``  — the end-to-end program: `triple_score` Pallas scoring ->
+  device top-k -> fused skew kernel -> threshold decision, chained in
+  one jitted computation (scores never leave HBM). Same scores-in
+  contract as ``pallas`` for :meth:`~DifficultyBackend.route_batch`,
+  plus :meth:`route_retrieved` for candidate-features-in routing.
+* ``auto``   — the production policy: a measured BATCH-SIZE CROSSOVER.
+  Batches below ``crossover_batch`` go to the ``oracle`` program (which
+  wins at small B — the seed's kernel-everywhere policy LOST to the
+  oracle at B=1, 0.25–0.72x), batches at or above it go to the ``fused``
+  kernels. The crossover is a serializable
+  :class:`~repro.api.spec.RouteSpec` field so every replica agrees.
+
+Interpret-vs-compiled is NEVER stored: every backend defers to
+:func:`repro.kernels.device.default_interpret` at CALL time (compiled on
+TPU, interpret elsewhere), so snapshots restored on a different host
+re-resolve against the local devices.
 
 Every backend produces the SAME contract: ``[B, K]`` descending-sorted
 scores (+ optional ``[B]`` ``n_valid``) -> a full
@@ -28,20 +43,21 @@ from a :class:`~repro.api.spec.RouteSpec` by name.
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional, Protocol, runtime_checkable
+from typing import Callable, Mapping, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.router import (RouteBatchResult, RouterConfig,
-                               difficulty_from_metrics, route_from_difficulty)
+from repro.core.router import (RetrievedRouteResult, RouteBatchResult,
+                               RouterConfig, route_all_metrics,
+                               route_retrieved)
+from repro.kernels.device import default_interpret  # noqa: F401  (re-export)
 
-
-def default_interpret() -> bool:
-    """The one canonical device-availability check: Pallas kernels run
-    compiled on TPU and in interpret mode everywhere else."""
-    return jax.default_backend() != "tpu"
+# Measured on the BENCH_routing_fastpath.json CPU-interpret grid: the
+# fused kernel path loses to the single-program oracle below ~32 rows
+# (0.25–0.72x at B=1) and wins decisively from B=64 up (18–79x). On TPU
+# the compiled kernel wins earlier — deployments set the spec field.
+DEFAULT_CROSSOVER_BATCH = 32
 
 
 @runtime_checkable
@@ -62,65 +78,138 @@ class DifficultyBackend(Protocol):
         ...
 
 
-def _route_from_metrics(metrics: jax.Array,
-                        config: RouterConfig) -> RouteBatchResult:
-    diff = difficulty_from_metrics(metrics, config.metric)
-    tiers = route_from_difficulty(diff, jnp.asarray(config.thresholds))
-    return RouteBatchResult(tiers=tiers, difficulty=diff, metrics=metrics)
-
-
-@functools.partial(jax.jit, static_argnames=("p_cdf", "ragged"))
-def _oracle_metrics(scores_desc: jax.Array, p_cdf: float,
-                    n_valid: Optional[jax.Array], ragged: bool) -> jax.Array:
-    from repro.kernels.skew_metrics.ref import (mask_from_n_valid,
-                                                skew_metrics_ref)
-    mask = (mask_from_n_valid(n_valid, scores_desc.shape[-1])
-            if ragged else None)
-    return skew_metrics_ref(scores_desc, p_cdf=p_cdf, mask=mask)
-
-
-class OracleBackend:
-    """XLA ground-truth backend (`core.skewness` metrics, stacked)."""
-
-    name = "oracle"
-
-    def metrics(self, scores_desc, p_cdf: float = 0.95, n_valid=None):
-        scores = jnp.atleast_2d(jnp.asarray(scores_desc))
-        return _oracle_metrics(scores, p_cdf,
-                               None if n_valid is None else jnp.asarray(n_valid),
-                               ragged=n_valid is not None)
-
-    def route_batch(self, scores_desc, config: RouterConfig, n_valid=None):
-        return _route_from_metrics(
-            self.metrics(scores_desc, config.cumulative_p, n_valid), config)
-
-
-class PallasBackend:
-    """Fused single-pass kernel backend (`kernels.skew_metrics`).
+class _SingleProgramBackend:
+    """Shared machinery: both concrete backends run the whole
+    metrics -> column-select -> threshold decision as ONE jitted device
+    program (`core.router._decision_program`); they differ only in the
+    metric implementation traced into it (``_use_kernel``) and in which
+    scoring stage :meth:`route_retrieved` fuses in front.
 
     ``interpret=None`` defers to :func:`default_interpret` at call time,
     so a backend object built off-TPU keeps working if devices change.
     """
 
-    name = "pallas"
+    _use_kernel: bool
 
     def __init__(self, interpret: Optional[bool] = None):
         self.interpret = interpret
 
+    def effective_interpret(self) -> bool:
+        """The interpret mode this call would use — resolved NOW, never
+        replayed from construction or snapshot time."""
+        return default_interpret() if self.interpret is None \
+            else self.interpret
+
     def metrics(self, scores_desc, p_cdf: float = 0.95, n_valid=None):
-        from repro.kernels.skew_metrics import ops as skew_ops
-        scores = jnp.atleast_2d(jnp.asarray(scores_desc))
-        return skew_ops.skew_metrics(
-            scores, p_cdf=p_cdf,
-            n_valid=None if n_valid is None else jnp.asarray(n_valid),
-            interpret=self.interpret)
+        return self.route_batch(
+            scores_desc,
+            RouterConfig(metric="gini", thresholds=(0.0,),
+                         cumulative_p=p_cdf), n_valid=n_valid).metrics
 
     def route_batch(self, scores_desc, config: RouterConfig, n_valid=None):
-        from repro.core.router import route_all_metrics
         return route_all_metrics(
             jnp.atleast_2d(jnp.asarray(scores_desc)), config,
             n_valid=None if n_valid is None else jnp.asarray(n_valid),
-            interpret=self.interpret)
+            interpret=self.effective_interpret(),
+            use_kernel=self._use_kernel)
+
+    def route_retrieved(self, feats, query_emb, params: Mapping,
+                        config: RouterConfig,
+                        n_cand=None) -> RetrievedRouteResult:
+        """[B, N, Dt] candidate features + [B, Dq] queries -> full
+        retrieve-to-decision output in one jitted program.
+
+        Off-TPU the Pallas stages would run under the interpreter — a
+        correctness tool that loses to plain XLA by >3x on the scoring
+        MLP (measured: e2e B=64 cell at 0.3x before this fallback) — so
+        when the call resolves to interpret mode the SAME fused program
+        is traced from the XLA implementations instead. On TPU
+        (interpret False) the real kernels run.
+        """
+        interp = self.effective_interpret()
+        return route_retrieved(
+            jnp.asarray(feats), jnp.asarray(query_emb), params, config,
+            n_cand=None if n_cand is None else jnp.asarray(n_cand),
+            interpret=interp,
+            use_kernels=self._use_kernel and not interp)
+
+
+class OracleBackend(_SingleProgramBackend):
+    """XLA ground-truth backend (`core.skewness` metrics, stacked) — one
+    jitted program per batch, no Pallas launch: the small-batch winner."""
+
+    name = "oracle"
+    _use_kernel = False
+
+    def __init__(self):
+        super().__init__(interpret=None)
+
+
+class PallasBackend(_SingleProgramBackend):
+    """Fused single-pass skew kernel backend (`kernels.skew_metrics`)."""
+
+    name = "pallas"
+    _use_kernel = True
+
+
+class FusedBackend(PallasBackend):
+    """The end-to-end device program: Pallas `triple_score` scoring ->
+    device top-k -> fused skew kernel -> threshold decision, one jitted
+    computation. For pre-scored batches it is the ``pallas`` fast path;
+    :meth:`route_retrieved` is the scores-never-leave-HBM entry."""
+
+    name = "fused"
+
+
+class AutoBackend:
+    """Batch-size crossover policy: ``oracle`` below ``crossover_batch``,
+    the ``fused`` kernels at or above it.
+
+    This is the bugfix for the seed's B=1 regression: ``auto`` used to be
+    a blind alias for the kernel path, which loses to the single-program
+    oracle at small batches (0.25–0.72x at B=1 on the tracked bench).
+    The crossover is policy, not environment — it lives in
+    :class:`~repro.api.spec.RouteSpec` so replicas agree — while the
+    interpret-vs-compiled choice stays call-time per host.
+    """
+
+    name = "auto"
+
+    def __init__(self, crossover_batch: int = DEFAULT_CROSSOVER_BATCH,
+                 interpret: Optional[bool] = None):
+        if crossover_batch < 1:
+            raise ValueError(f"crossover_batch must be >= 1, "
+                             f"got {crossover_batch}")
+        self.crossover_batch = int(crossover_batch)
+        self.oracle = OracleBackend()
+        self.fused = FusedBackend(interpret=interpret)
+
+    @property
+    def interpret(self) -> Optional[bool]:
+        return self.fused.interpret
+
+    def effective_interpret(self) -> bool:
+        return self.fused.effective_interpret()
+
+    def pick(self, batch_size: int) -> DifficultyBackend:
+        """The crossover in one place (bench/telemetry introspect this)."""
+        return self.oracle if batch_size < self.crossover_batch \
+            else self.fused
+
+    def metrics(self, scores_desc, p_cdf: float = 0.95, n_valid=None):
+        scores = jnp.atleast_2d(jnp.asarray(scores_desc))
+        return self.pick(scores.shape[0]).metrics(scores, p_cdf=p_cdf,
+                                                  n_valid=n_valid)
+
+    def route_batch(self, scores_desc, config: RouterConfig, n_valid=None):
+        scores = jnp.atleast_2d(jnp.asarray(scores_desc))
+        return self.pick(scores.shape[0]).route_batch(scores, config,
+                                                      n_valid=n_valid)
+
+    def route_retrieved(self, feats, query_emb, params: Mapping,
+                        config: RouterConfig, n_cand=None):
+        return self.pick(jnp.asarray(feats).shape[0]).route_retrieved(
+            feats, query_emb, params, config, n_cand=n_cand)
 
 
 # --- registry ----------------------------------------------------------------
@@ -141,18 +230,20 @@ def available_backends() -> tuple[str, ...]:
 
 
 def resolve_backend_name(name: str = "auto") -> str:
-    """``auto`` is an alias for ``pallas``; the actual device decision
-    (compiled vs interpret) happens at call time via
-    :func:`default_interpret`, not here."""
-    return "pallas" if name == "auto" else name
+    """``auto`` is a first-class backend now (the crossover policy), no
+    longer an alias: it resolves to itself. Kept for callers that log or
+    validate backend names."""
+    return name
 
 
 def make_backend(name: str = "auto", **kwargs) -> DifficultyBackend:
-    """Instantiate a difficulty backend by name (``auto`` = the fused
-    kernel with call-time interpret fallback — see module docstring)."""
-    concrete = resolve_backend_name(name)
+    """Instantiate a difficulty backend by name (``auto`` = the batch-size
+    crossover over oracle/fused — see module docstring; accepts
+    ``crossover_batch=``)."""
+    if name == "auto":
+        return AutoBackend(**kwargs)
     try:
-        factory = _REGISTRY[concrete]
+        factory = _REGISTRY[name]
     except KeyError:
         raise ValueError(f"unknown difficulty backend {name!r}; "
                          f"choose from {available_backends()}") from None
@@ -161,3 +252,4 @@ def make_backend(name: str = "auto", **kwargs) -> DifficultyBackend:
 
 register_backend("oracle", OracleBackend)
 register_backend("pallas", PallasBackend)
+register_backend("fused", FusedBackend)

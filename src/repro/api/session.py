@@ -54,7 +54,13 @@ class SkewRouteSession:
     def __init__(self, spec: RouteSpec,
                  runners: Optional[Union[Runners, EngineBankLike]] = None):
         self.spec = spec
-        self.backend = _backends.make_backend(spec.backend)
+        # crossover_batch is policy and rides in the spec; interpret mode
+        # is environment and is NEVER passed here — backends re-resolve
+        # it per call (see repro.kernels.device.default_interpret), so a
+        # snapshot taken on TPU restores cleanly on CPU and vice versa.
+        backend_kwargs = ({"crossover_batch": spec.crossover_batch}
+                          if spec.backend == "auto" else {})
+        self.backend = _backends.make_backend(spec.backend, **backend_kwargs)
         # One facade-level lock makes session verbs atomic w.r.t. each
         # other (the dispatcher's internal lock only covers its own
         # counters, not the pipeline queues a concurrent submit mutates).
@@ -123,6 +129,25 @@ class SkewRouteSession:
                   n_valid: Optional[int] = None) -> DispatchRecord:
         """One request (same fused path, batch of one)."""
         return self.dispatcher.dispatch(scores_desc, n_valid=n_valid)
+
+    def route_retrieved(self, feats: np.ndarray, query_emb: np.ndarray,
+                        scorer_params: Mapping,
+                        n_cand: Optional[np.ndarray] = None):
+        """End-to-end routing from candidate features: Pallas triple
+        scoring -> device top-k -> skew metrics -> tier decision as ONE
+        device program (no host hop between retrieval and dispatch).
+
+        ``feats``: [B, N, Dt] per-query candidate features (see
+        `repro.retrieval.scorer.batch_triple_features`); ``query_emb``:
+        [B, Dq]; ``scorer_params``: the trained scorer weight dict (its
+        layout is the kernel's). Returns a
+        :class:`~repro.serving.router_service.RetrievedDispatchResult`
+        — dispatcher telemetry and streaming calibration update exactly
+        as for :meth:`route`.
+        """
+        return self.dispatcher.dispatch_retrieved(
+            np.asarray(feats), np.asarray(query_emb), scorer_params,
+            n_cand=n_cand)
 
     def submit(self, scores_desc: np.ndarray,
                payloads: Optional[Sequence] = None,

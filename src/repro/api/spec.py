@@ -157,6 +157,12 @@ class RouteSpec:
     tier_names: tuple[str, ...] = ("small", "large")
     tier_models: Optional[tuple[str, ...]] = None
     backend: str = "auto"
+    # Batch-size crossover of the ``auto`` backend: batches below this go
+    # to the single-program XLA oracle, at/above it to the fused kernels.
+    # Policy, not environment — serialized so every replica routes the
+    # same request batch the same way. (Added with a default, so
+    # schema-version-1 payloads without the key still load.)
+    crossover_batch: int = _backends.DEFAULT_CROSSOVER_BATCH
     micro_batch: int = 8
     calibration: CalibrationSpec = dataclasses.field(
         default_factory=CalibrationSpec)
@@ -192,6 +198,9 @@ class RouteSpec:
         if self.micro_batch < 1:
             raise ValueError(f"micro_batch must be >= 1, "
                              f"got {self.micro_batch}")
+        if self.crossover_batch < 1:
+            raise ValueError(f"crossover_batch must be >= 1, "
+                             f"got {self.crossover_batch}")
         if (_backends.resolve_backend_name(self.backend)
                 not in _backends.available_backends()):
             raise ValueError(
@@ -238,6 +247,7 @@ class RouteSpec:
             "tier_models": (None if self.tier_models is None
                             else list(self.tier_models)),
             "backend": self.backend,
+            "crossover_batch": self.crossover_batch,
             "micro_batch": self.micro_batch,
             "calibration": self.calibration.to_dict(),
             "cost": self.cost.to_dict(),

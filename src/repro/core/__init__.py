@@ -17,6 +17,7 @@ from repro.core.skewness import (  # noqa: F401
     normalize_prob,
 )
 from repro.core.router import (  # noqa: F401
+    RetrievedRouteResult,
     RouteBatchResult,
     RouterConfig,
     RoutingStats,
@@ -25,6 +26,8 @@ from repro.core.router import (  # noqa: F401
     route_all_metrics,
     route_binary,
     route_from_difficulty,
+    route_retrieved,
+    route_retrieved_staged,
 )
 from repro.core.streaming_calibrate import (  # noqa: F401
     DriftEvent,

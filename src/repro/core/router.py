@@ -14,12 +14,14 @@ the calibrator produces new thresholds (no weights, no training state).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import functools
+from typing import Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import skewness
+from repro.kernels.device import default_interpret
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,21 +99,62 @@ def difficulty_from_metrics(metrics: jax.Array, metric: str) -> jax.Array:
     return sign * metrics[..., col]
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "p_cdf", "ragged",
+                                             "use_kernel", "interpret"))
+def _decision_program(scores_desc: jax.Array, thresholds: jax.Array,
+                      n_valid: Optional[jax.Array], *, metric: str,
+                      p_cdf: float, ragged: bool, use_kernel: bool,
+                      interpret: bool):
+    """metrics -> column select -> threshold compare as ONE jitted device
+    program — a routing decision is a single dispatch regardless of which
+    metric implementation (fused Pallas kernel or the XLA oracle) feeds
+    it. Thresholds ride along as a runtime array so calibration hot-swaps
+    never trigger a recompile."""
+    if use_kernel:
+        from repro.kernels.skew_metrics import ops as skew_ops
+        metrics = skew_ops.skew_metrics(scores_desc, p_cdf=p_cdf,
+                                        n_valid=n_valid if ragged else None,
+                                        interpret=interpret)
+    else:
+        from repro.kernels.skew_metrics.ref import (mask_from_n_valid,
+                                                    skew_metrics_ref)
+        mask = (mask_from_n_valid(n_valid, scores_desc.shape[-1])
+                if ragged else None)
+        metrics = skew_metrics_ref(scores_desc, p_cdf=p_cdf, mask=mask)
+    diff = difficulty_from_metrics(metrics, metric)
+    tiers = route_from_difficulty(diff, thresholds)
+    return tiers, diff, metrics
+
+
+@functools.lru_cache(maxsize=512)
+def _thresholds_array(thresholds: tuple[float, ...]) -> jax.Array:
+    """Device copy of a threshold tuple, cached — B=1 dispatch latency is
+    overhead-dominated, and re-uploading an unchanged 8-byte array every
+    call is pure overhead (hot-swaps produce a new tuple -> new entry)."""
+    return jnp.asarray(thresholds)
+
+
 def route_all_metrics(scores_desc: jax.Array, config: RouterConfig,
                       n_valid: Optional[jax.Array] = None,
-                      interpret: Optional[bool] = None) -> RouteBatchResult:
-    """Batched fast path: ONE fused Pallas pass (interpret-mode on CPU)
-    computes all four skew metrics; tier choice is a column select plus a
-    threshold compare — no per-metric recompiles, no per-request calls.
+                      interpret: Optional[bool] = None,
+                      use_kernel: bool = True) -> RouteBatchResult:
+    """Batched fast path: ONE device program (fused Pallas pass by
+    default; interpret-mode off-TPU) computes all four skew metrics, the
+    column select, and the threshold compare — no per-metric recompiles,
+    no per-request calls, no host hop between metrics and decision.
 
     ``scores_desc``: [B, K] descending-sorted top-K retrieval scores.
     ``n_valid``: optional [B] valid-prefix counts for ragged retrieval.
+    ``use_kernel=False`` swaps in the XLA oracle metrics (same single-
+    program shape — what the ``oracle`` difficulty backend runs).
     """
-    from repro.kernels.skew_metrics import ops as skew_ops
-    metrics = skew_ops.skew_metrics(scores_desc, p_cdf=config.cumulative_p,
-                                    n_valid=n_valid, interpret=interpret)
-    diff = difficulty_from_metrics(metrics, config.metric)
-    tiers = route_from_difficulty(diff, jnp.asarray(config.thresholds))
+    if interpret is None:
+        interpret = default_interpret()
+    tiers, diff, metrics = _decision_program(
+        scores_desc, _thresholds_array(config.thresholds), n_valid,
+        metric=config.metric, p_cdf=config.cumulative_p,
+        ragged=n_valid is not None, use_kernel=use_kernel,
+        interpret=interpret)
     return RouteBatchResult(tiers=tiers, difficulty=diff, metrics=metrics)
 
 
@@ -129,6 +172,147 @@ def route_binary(scores: jax.Array, config: RouterConfig,
                  mask: Optional[jax.Array] = None) -> jax.Array:
     """Paper's two-tier form: True -> large LLM (F_L), False -> small (F_S)."""
     return route(scores, config, mask) > 0
+
+
+# -- end-to-end: retrieval scoring -> top-k -> skew -> decision ---------------
+
+_NEG_INF = -1e30  # masks padded/invalid candidates out of top-k
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievedRouteResult:
+    """Everything the fused retrieve-to-decision program produces.
+
+    ``indices``/``probs`` are the top-K retrieval output (candidate index
+    into the per-query feature rows, sigmoid score in [0, 1], descending);
+    ``n_valid`` counts the usable leading entries per row (< K when a
+    query had fewer than K candidates). The routing triple
+    (tiers/difficulty/metrics) matches :class:`RouteBatchResult`.
+    """
+
+    indices: jax.Array      # [B, K] int32 candidate indices, desc by score
+    probs: jax.Array        # [B, K] float32 sigmoid scores
+    n_valid: jax.Array      # [B] int32 usable prefix length (= min(n_cand, K))
+    tiers: jax.Array        # [B] int32
+    difficulty: jax.Array   # [B] float32
+    metrics: jax.Array      # [B, 4] float32
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "metric", "p_cdf",
+                                             "ragged", "use_kernels",
+                                             "interpret", "tile"))
+def _retrieved_program(feats: jax.Array, query_emb: jax.Array,
+                       w1_t, w1_q, b1, w2, b2,
+                       thresholds: jax.Array, n_cand: Optional[jax.Array],
+                       *, top_k: int, metric: str, p_cdf: float,
+                       ragged: bool, use_kernels: bool, interpret: bool,
+                       tile: int):
+    """The tentpole: scoring -> top-k -> skew metrics -> tier decision in
+    ONE jitted device program. Candidate scores never leave HBM; the host
+    sees only the [B, K] retrieval output and the [B] tier ids."""
+    b, n, _ = feats.shape
+    if use_kernels:
+        from repro.kernels.triple_score import kernel as ts_kernel
+        logits = ts_kernel.triple_score_batched(
+            feats, query_emb, w1_t, w1_q, b1, w2, b2,
+            tile=tile, interpret=interpret)
+    else:
+        from repro.kernels.triple_score.ref import triple_score_batched_ref
+        logits = triple_score_batched_ref(feats, query_emb,
+                                          w1_t, w1_q, b1, w2, b2)
+    if ragged:
+        nc = jnp.clip(jnp.asarray(n_cand, jnp.int32), 1, n)
+        col = jnp.arange(n, dtype=jnp.int32)[None, :]
+        logits = jnp.where(col < nc[:, None], logits, _NEG_INF)
+        nv = jnp.minimum(nc, top_k)
+    else:
+        nv = jnp.full((b,), min(n, top_k), jnp.int32)
+    vals, idx = jax.lax.top_k(logits, top_k)      # descending by score
+    probs = jax.nn.sigmoid(vals)                  # paper scores are [0, 1]
+    tiers, diff, metrics = _decision_program(
+        probs, thresholds, nv, metric=metric, p_cdf=p_cdf, ragged=True,
+        use_kernel=use_kernels, interpret=interpret)
+    return idx.astype(jnp.int32), probs, nv, tiers, diff, metrics
+
+
+def route_retrieved(feats: jax.Array, query_emb: jax.Array,
+                    params: Mapping[str, jax.Array], config: RouterConfig,
+                    n_cand: Optional[jax.Array] = None,
+                    interpret: Optional[bool] = None,
+                    use_kernels: bool = True,
+                    tile: int = 128) -> RetrievedRouteResult:
+    """Fused end-to-end routing: per-query candidate features in, tier
+    decisions out, with zero host round-trips in between.
+
+    ``feats``: [B, N, Dt] per-query candidate triple features (padded to a
+    common N; see `repro.retrieval.scorer.batch_triple_features`).
+    ``query_emb``: [B, Dq]. ``params``: the scorer weight dict — its
+    layout (``w1_t``/``w1_q``/``b1``/``w2``/``b2``) is the Pallas
+    `triple_score` kernel's argument order, making the kernel a drop-in.
+    ``n_cand``: optional [B] real candidate counts (ragged retrieval);
+    padded rows beyond ``n_cand`` are masked out of the top-k.
+    ``use_kernels=False`` runs the identical chain on the XLA reference
+    ops (the oracle variant — still one jitted program).
+
+    ``interpret=None`` re-resolves compiled-vs-interpret at every call
+    (`repro.kernels.device.default_interpret`), so a policy restored on a
+    different host never replays the donor device's choice.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    k = min(config.top_k, feats.shape[1])
+    idx, probs, nv, tiers, diff, metrics = _retrieved_program(
+        feats, query_emb, params["w1_t"], params["w1_q"], params["b1"],
+        params["w2"], params["b2"], jnp.asarray(config.thresholds),
+        None if n_cand is None else jnp.asarray(n_cand, jnp.int32),
+        top_k=k, metric=config.metric, p_cdf=config.cumulative_p,
+        ragged=n_cand is not None, use_kernels=use_kernels,
+        interpret=interpret, tile=tile)
+    return RetrievedRouteResult(indices=idx, probs=probs, n_valid=nv,
+                                tiers=tiers, difficulty=diff, metrics=metrics)
+
+
+def route_retrieved_staged(feats, query_emb, params: Mapping,
+                           config: RouterConfig,
+                           n_cand=None) -> RetrievedRouteResult:
+    """The readable host-staged reference for :func:`route_retrieved` —
+    exactly what the pre-fusion serving path did per request: XLA scoring,
+    scores back to host, numpy argsort top-k, sigmoid, then the oracle
+    skew metrics and threshold compare. Used by the parity tests and as
+    the end-to-end benchmark baseline; never the serving path.
+    """
+    import numpy as np
+
+    from repro.kernels.skew_metrics.ref import (mask_from_n_valid,
+                                                skew_metrics_ref)
+    from repro.kernels.triple_score.ref import triple_score_ref
+
+    feats = np.asarray(feats)
+    query_emb = np.asarray(query_emb)
+    b, n, _ = feats.shape
+    k = min(config.top_k, n)
+    nc = (np.full(b, n, np.int32) if n_cand is None
+          else np.clip(np.asarray(n_cand, np.int32), 1, n))
+    idx = np.zeros((b, k), np.int32)
+    probs = np.zeros((b, k), np.float32)
+    nv = np.minimum(nc, k).astype(np.int32)
+    for i in range(b):
+        scores = np.asarray(triple_score_ref(
+            jnp.asarray(feats[i, :nc[i]]), jnp.asarray(query_emb[i][None]),
+            params["w1_t"], params["w1_q"], params["b1"],
+            params["w2"], params["b2"]))[0]
+        order = np.argsort(-scores, kind="stable")[:k]
+        idx[i, :len(order)] = order
+        probs[i, :len(order)] = 1.0 / (1.0 + np.exp(-scores[order]))
+    mask = mask_from_n_valid(jnp.asarray(nv), k)
+    metrics = skew_metrics_ref(jnp.asarray(probs), p_cdf=config.cumulative_p,
+                               mask=mask)
+    diff = difficulty_from_metrics(metrics, config.metric)
+    tiers = route_from_difficulty(diff, jnp.asarray(config.thresholds))
+    return RetrievedRouteResult(indices=jnp.asarray(idx),
+                                probs=jnp.asarray(probs),
+                                n_valid=jnp.asarray(nv), tiers=tiers,
+                                difficulty=diff, metrics=metrics)
 
 
 @dataclasses.dataclass(frozen=True)

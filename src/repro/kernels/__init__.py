@@ -3,4 +3,9 @@
 Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM
 tiling), ops.py (jit'd public wrapper with an interpret/XLA fallback) and
 ref.py (pure-jnp oracle used by the allclose test sweeps).
+
+`repro.kernels.device.default_interpret` is the canonical call-time
+compiled-vs-interpret decision shared by every wrapper.
 """
+
+from repro.kernels.device import default_interpret  # noqa: F401

@@ -1,0 +1,19 @@
+"""The one canonical device-availability check for Pallas kernels.
+
+Every layer that launches a kernel (kernel ops wrappers, the difficulty
+backends in `repro.api`, the fused routing program in `repro.core.router`)
+defers to this function AT CALL TIME: compiled on TPU, interpret mode
+everywhere else. Keeping it here — the lowest layer, imported by
+everything above — means the interpret-vs-compiled choice is never baked
+into a serialized policy or session snapshot: a snapshot taken on TPU and
+restored on CPU re-resolves against the restoring host's devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run compiled on TPU and in interpret mode elsewhere."""
+    return jax.default_backend() != "tpu"

@@ -14,6 +14,7 @@ from typing import Optional
 
 import jax
 
+from repro.kernels.device import default_interpret
 from repro.kernels.skew_metrics import kernel, ref
 from repro.kernels.skew_metrics.kernel import METRIC_COLUMNS  # noqa: F401
 
@@ -26,7 +27,7 @@ def skew_metrics(scores_desc, p_cdf: float = 0.95,
     ``n_valid`` is clamped to [1, K] (empty rows become one degenerate
     entry; see kernel docstring)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     return kernel.skew_metrics(scores_desc, n_valid=n_valid, p_cdf=p_cdf,
                                interpret=interpret)
 

@@ -40,6 +40,10 @@ def _score_kernel(t_ref, qb_ref, w1_ref, w2_ref, b2_ref, o_ref):
     o_ref[...] = (score[:, 0] + b2_ref[0]).astype(o_ref.dtype)[None]
 
 
+def _pad_to(n: int, multiple: int) -> int:
+    return -(-n // multiple) * multiple
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def triple_score(triple_feats: jax.Array, query_emb: jax.Array,
                  w1_t: jax.Array, w1_q: jax.Array, b1: jax.Array,
@@ -73,3 +77,49 @@ def triple_score(triple_feats: jax.Array, query_emb: jax.Array,
         out_shape=jax.ShapeDtypeStruct((q_count, n), jnp.float32),
         interpret=interpret,
     )(triple_feats, q_bias, w1_t, w2, b2)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def triple_score_batched(triple_feats: jax.Array, query_emb: jax.Array,
+                         w1_t: jax.Array, w1_q: jax.Array, b1: jax.Array,
+                         w2: jax.Array, b2: jax.Array,
+                         tile: int = DEFAULT_TILE,
+                         interpret: bool = False) -> jax.Array:
+    """Per-query candidate sets: each query scores only ITS OWN triples.
+
+    triple_feats: [B, N, Dt]; query_emb: [B, Dq] -> scores [B, N].
+
+    Same kernel body as :func:`triple_score` — the [B, N, Dt] batch is
+    flattened to [B*Npad, Dt] and the block index map walks each query's
+    own slice (block ``iq * tiles_per_query + it``), so weights and the
+    per-query bias stay VMEM-resident exactly as in the shared-candidate
+    variant. N is padded up to the tile size internally; padded rows are
+    zero-feature triples whose scores are sliced off before returning
+    (callers masking ragged candidate sets still pass their own
+    ``n_cand`` downstream — see `repro.core.router.route_retrieved`).
+    """
+    b, n, dt = triple_feats.shape
+    h_dim = w1_t.shape[1]
+    npad = _pad_to(n, tile)
+    feats = jnp.pad(triple_feats, ((0, 0), (0, npad - n), (0, 0)))
+    flat = feats.reshape(b * npad, dt)
+    q_bias = (query_emb.astype(jnp.float32) @ w1_q.astype(jnp.float32)
+              + b1.astype(jnp.float32))                      # [B, H]
+    tiles_per_query = npad // tile
+    grid = (b, tiles_per_query)
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, dt),
+                         lambda iq, it: (iq * (npad // tile) + it, 0)),
+            pl.BlockSpec((1, h_dim), lambda iq, it: (iq, 0)),
+            pl.BlockSpec((dt, h_dim), lambda iq, it: (0, 0)),
+            pl.BlockSpec((h_dim, 1), lambda iq, it: (0, 0)),
+            pl.BlockSpec((1,), lambda iq, it: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda iq, it: (iq, it)),
+        out_shape=jax.ShapeDtypeStruct((b, npad), jnp.float32),
+        interpret=interpret,
+    )(flat, q_bias, w1_t, w2, b2)
+    return out[:, :n]

@@ -1,17 +1,40 @@
-"""Public wrapper for the fused triple scorer."""
+"""Public wrappers for the fused triple scorer.
+
+Both entry points resolve the compiled-vs-interpret choice at CALL time
+via the canonical :func:`repro.kernels.device.default_interpret` check
+(``interpret=None``), so an op reference captured off-TPU keeps working
+when devices change — the same contract as the skew-metrics wrapper.
+"""
 
 from __future__ import annotations
 
-import jax
+from typing import Optional
 
+from repro.kernels.device import default_interpret
 from repro.kernels.triple_score import kernel, ref
 
 
 def triple_score(triple_feats, query_emb, w1_t, w1_q, b1, w2, b2,
-                 tile: int = kernel.DEFAULT_TILE):
-    on_tpu = jax.default_backend() == "tpu"
+                 tile: int = kernel.DEFAULT_TILE,
+                 interpret: Optional[bool] = None):
+    """Shared candidate set: [N,Dt] x [Q,Dq] -> [Q,N]."""
+    if interpret is None:
+        interpret = default_interpret()
     return kernel.triple_score(triple_feats, query_emb, w1_t, w1_q, b1,
-                               w2, b2, tile=tile, interpret=not on_tpu)
+                               w2, b2, tile=tile, interpret=interpret)
+
+
+def triple_score_batched(triple_feats, query_emb, w1_t, w1_q, b1, w2, b2,
+                         tile: int = kernel.DEFAULT_TILE,
+                         interpret: Optional[bool] = None):
+    """Per-query candidate sets: [B,N,Dt] x [B,Dq] -> [B,N] (N padded to
+    the tile size internally — any N works)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return kernel.triple_score_batched(triple_feats, query_emb, w1_t, w1_q,
+                                       b1, w2, b2, tile=tile,
+                                       interpret=interpret)
 
 
 triple_score_ref = ref.triple_score_ref
+triple_score_batched_ref = ref.triple_score_batched_ref

@@ -14,3 +14,13 @@ def triple_score_ref(triple_feats, query_emb, w1_t, w1_q, b1, w2, b2):
         + (q32 @ w1_q.astype(jnp.float32) + b1)[:, None, :]
     h = jax.nn.relu(h)
     return (h @ w2.astype(jnp.float32))[..., 0] + b2[0]
+
+
+def triple_score_batched_ref(triple_feats, query_emb, w1_t, w1_q, b1, w2, b2):
+    """Per-query candidates: [B,N,Dt] x [B,Dq] -> [B,N] scores."""
+    t32 = triple_feats.astype(jnp.float32)
+    q32 = query_emb.astype(jnp.float32)
+    h = t32 @ w1_t.astype(jnp.float32) \
+        + (q32 @ w1_q.astype(jnp.float32) + b1)[:, None, :]
+    h = jax.nn.relu(h)
+    return (h @ w2.astype(jnp.float32))[..., 0] + b2[0]

@@ -155,3 +155,79 @@ def retrieve(params: dict, kg: KnowledgeGraph, ent, rel, q: Query,
     order = np.argsort(-scores)[:k]
     probs = 1.0 / (1.0 + np.exp(-scores[order]))  # paper scores are [0,1]
     return edges[order], probs.astype(np.float32)
+
+
+# -- batched device-side retrieval (feeds the fused routing program) ----------
+
+
+def kernel_weights(params: dict) -> tuple:
+    """The scorer weights in the Pallas `triple_score` kernel's argument
+    order — the drop-in contract made explicit (and the one place that
+    would break loudly if either layout ever drifted)."""
+    return (params["w1_t"], params["w1_q"], params["b1"],
+            params["w2"], params["b2"])
+
+
+def batch_triple_features(kg: KnowledgeGraph, ent, rel,
+                          queries: list, max_cands: int = 512,
+                          seed: int = 0
+                          ) -> tuple[np.ndarray, np.ndarray,
+                                     np.ndarray, np.ndarray]:
+    """Stack per-query candidate features into one ragged device batch.
+
+    Returns ``(feats [B, N, Dt], query_embs [B, Dq], edge_ids [B, N],
+    n_cand [B])`` where N is the largest candidate count in the batch;
+    rows are zero-padded past ``n_cand`` (edge_ids pad with -1). This is
+    the host-side data-pipeline half; everything after it — scoring,
+    top-k, skew, tier decision — runs as one device program
+    (`repro.core.router.route_retrieved`).
+    """
+    per_query = []
+    for q in queries:
+        edges = candidate_edges(kg, q, max_edges=max_cands, seed=seed)
+        per_query.append((edges, triple_features(kg, ent, rel, q, edges)))
+    n = max(len(edges) for edges, _ in per_query)
+    dt = per_query[0][1].shape[1]
+    b = len(queries)
+    feats = np.zeros((b, n, dt), np.float32)
+    edge_ids = np.full((b, n), -1, np.int64)
+    n_cand = np.zeros(b, np.int32)
+    for i, (edges, f) in enumerate(per_query):
+        feats[i, :len(edges)] = f
+        edge_ids[i, :len(edges)] = edges
+        n_cand[i] = len(edges)
+    qembs = np.stack([q.query_emb for q in queries]).astype(np.float32)
+    return feats, qembs, edge_ids, n_cand
+
+
+def retrieve_batch(params: dict, kg: KnowledgeGraph, ent, rel,
+                   queries: list, cfg: ScorerConfig, max_cands: int = 512,
+                   seed: int = 0, interpret: bool | None = None
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched top-K retrieval on device: one fused kernel program scores
+    every query's candidates and top-ks them — the batched counterpart of
+    :func:`retrieve` (same edge ids and probs per query).
+
+    Returns ``(edge_ids [B, K], probs [B, K], n_valid [B])``; rows with
+    fewer than K candidates pad edge_ids with -1 / probs with 0 past
+    ``n_valid``.
+    """
+    from repro.kernels.triple_score import ops as ts_ops
+
+    feats, qembs, edge_ids, n_cand = batch_triple_features(
+        kg, ent, rel, queries, max_cands=max_cands, seed=seed)
+    n = feats.shape[1]
+    logits = np.asarray(ts_ops.triple_score_batched(
+        jnp.asarray(feats), jnp.asarray(qembs), *kernel_weights(params),
+        interpret=interpret))
+    logits = np.where(np.arange(n)[None, :] < n_cand[:, None],
+                      logits, -np.inf)
+    k = min(cfg.top_k, n)
+    vals, idx = jax.lax.top_k(jnp.asarray(logits), k)
+    idx, vals = np.asarray(idx), np.asarray(vals)
+    n_valid = np.minimum(n_cand, k).astype(np.int32)
+    probs = np.where(np.isfinite(vals),
+                     1.0 / (1.0 + np.exp(-vals)), 0.0).astype(np.float32)
+    out_edges = np.take_along_axis(edge_ids, idx, axis=1)
+    out_edges[np.arange(k)[None, :] >= n_valid[:, None]] = -1
+    return out_edges, probs, n_valid

@@ -80,6 +80,22 @@ class BatchDispatchResult:
 
 
 @dataclasses.dataclass
+class RetrievedDispatchResult:
+    """End-to-end dispatch output: the routing decision plus the top-K
+    retrieval the fused program produced on the way (candidate indices
+    into the per-query feature rows, sigmoid scores, valid prefix)."""
+
+    result: BatchDispatchResult
+    indices: np.ndarray       # [B, K] int32
+    probs: np.ndarray         # [B, K] float32, descending
+    n_valid: np.ndarray       # [B] int32
+
+    @property
+    def tiers(self) -> np.ndarray:
+        return self.result.tiers
+
+
+@dataclasses.dataclass
 class DispatcherStats:
     n_requests: int = 0
     n_batches: int = 0
@@ -205,6 +221,66 @@ class SkewRouteDispatcher:
         diff = np.asarray(result.difficulty)[:b]
         metrics = np.asarray(result.metrics)[:b]
 
+        first_id, metric_name, recalibrated = self._record_batch(tiers, diff)
+        if not return_details:
+            return tiers
+        return BatchDispatchResult(tiers=tiers, difficulty=diff,
+                                   metrics=metrics, first_id=first_id,
+                                   metric=metric_name,
+                                   recalibrated=recalibrated)
+
+    def dispatch_retrieved(self, feats: np.ndarray, query_emb: np.ndarray,
+                           scorer_params, n_cand: Optional[np.ndarray] = None
+                           ) -> "RetrievedDispatchResult":
+        """End-to-end dispatch from candidate features: ONE device program
+        (scoring -> top-k -> skew -> decision; see
+        `repro.core.router.route_retrieved`) replaces the old
+        score-on-device / top-k-on-host / re-enter-device-for-metrics
+        staging. Telemetry and streaming calibration update exactly as
+        for :meth:`dispatch_batch`.
+
+        ``feats``: [B, N, Dt]; ``query_emb``: [B, Dq]; ``n_cand``:
+        optional [B] real candidate counts (ragged retrieval).
+        """
+        feats = np.asarray(feats)
+        b, k_feats, _ = feats.shape
+        bpad = bucket_size(b, BATCH_BUCKETS)
+        qemb = np.asarray(query_emb)
+        nc = np.full(bpad, k_feats, np.int32)
+        if n_cand is not None:
+            nc[:b] = np.asarray(n_cand, np.int32)
+        nc[b:] = 1  # padded rows: degenerate but well-defined
+        if not hasattr(self.backend, "route_retrieved"):
+            raise TypeError(
+                f"difficulty backend {self.backend.name!r} has no "
+                f"route_retrieved; end-to-end dispatch needs one of the "
+                f"built-in backends (oracle | pallas | fused | auto) or a "
+                f"custom backend implementing it")
+        if bpad != b:
+            feats = np.concatenate(
+                [feats, np.zeros((bpad - b,) + feats.shape[1:], feats.dtype)])
+            qemb = np.concatenate(
+                [qemb, np.zeros((bpad - b, qemb.shape[1]), qemb.dtype)])
+        res = self.backend.route_retrieved(
+            jnp.asarray(feats), jnp.asarray(qemb), scorer_params,
+            self.router, n_cand=jnp.asarray(nc))
+        tiers = np.asarray(res.tiers)[:b]
+        diff = np.asarray(res.difficulty)[:b]
+        first_id, metric_name, recalibrated = self._record_batch(tiers, diff)
+        return RetrievedDispatchResult(
+            result=BatchDispatchResult(
+                tiers=tiers, difficulty=diff,
+                metrics=np.asarray(res.metrics)[:b], first_id=first_id,
+                metric=metric_name, recalibrated=recalibrated),
+            indices=np.asarray(res.indices)[:b],
+            probs=np.asarray(res.probs)[:b],
+            n_valid=np.asarray(res.n_valid)[:b])
+
+    def _record_batch(self, tiers: np.ndarray,
+                      diff: np.ndarray) -> tuple[int, str, bool]:
+        """The control-plane half shared by every dispatch entry: request
+        ids, tier/cost/difficulty counters, drift-aware recalibration."""
+        b = len(tiers)
         recalibrated = False
         with self._lock:
             metric_name = self.router.metric
@@ -231,10 +307,4 @@ class SkewRouteDispatcher:
                     self.router = new_config
                     self.stats.n_recalibrations += 1
                     recalibrated = True
-
-        if not return_details:
-            return tiers
-        return BatchDispatchResult(tiers=tiers, difficulty=diff,
-                                   metrics=metrics, first_id=first_id,
-                                   metric=metric_name,
-                                   recalibrated=recalibrated)
+        return first_id, metric_name, recalibrated

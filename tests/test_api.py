@@ -266,8 +266,11 @@ def test_snapshot_refuses_pending_payloads():
 # -- backends registry --------------------------------------------------------
 
 def test_backend_registry_and_auto():
-    assert {"oracle", "pallas", "auto"} <= set(available_backends())
-    assert isinstance(make_backend("auto"), PallasBackend)
+    assert {"oracle", "pallas", "fused", "auto"} <= set(available_backends())
+    auto = make_backend("auto")
+    assert isinstance(auto, backends_mod.AutoBackend)
+    assert auto.crossover_batch == backends_mod.DEFAULT_CROSSOVER_BATCH
+    assert isinstance(make_backend("fused"), backends_mod.FusedBackend)
     with pytest.raises(ValueError, match="unknown difficulty backend"):
         make_backend("quantum")
     with pytest.raises(ValueError, match="invalid backend name"):
