@@ -1,0 +1,67 @@
+"""Serving under load: replay the canonical bursty+drift trace through a
+`SkewRouteSession` with the admission controller enabled.
+
+The trace (``repro.serving.loadgen.CANONICAL_TRACES``) throws everything
+at the router at once: a 4x arrival burst, a score-skew drift that makes
+every query look hard, and a large-tier replica failure. Watch the
+telemetry trajectory react: the streaming calibrator re-fits thresholds
+for the drift, the budget loop tightens the expensive tier's share when
+$/query burns past the budget, and tier-spill engages (with hysteresis)
+while the expensive pool saturates — then everything relaxes as the
+burst passes.
+
+  PYTHONPATH=src python examples/serve_under_load.py
+"""
+
+from repro.serving.loadgen import canonical_load_runner, canonical_trace
+
+
+def main():
+    trace = canonical_trace("bursty_drift_saturation")
+    runner = canonical_load_runner(with_admission=True, trace=trace)
+    session = runner.session
+    print(f"trace {trace.name!r}: {trace.steps} steps, "
+          f"burst x{trace.bursts[0].multiplier:.0f} at step "
+          f"{trace.bursts[0].start}, drift at step {trace.drift[1].start}, "
+          f"replica failure at step {trace.failures[0].down_at}")
+    print(f"admission: budget "
+          f"${session.spec.admission.cost_budget_per_query}/query, "
+          f"p99 SLO {session.spec.admission.p99_slo}s\n")
+
+    report = runner.run(trace)
+
+    print(f"{'step':>5} {'arrv':>4} {'q0':>5} {'q1':>5} {'theta':>7} "
+          f"{'top%':>5} {'spill':>5} {'$/query':>9}")
+    for row in report.steps[::25]:
+        print(f"{row['step']:>5} {row['arrivals']:>4} "
+              f"{row['queue_depths']['0']:>5} "
+              f"{row['queue_depths']['1']:>5} "
+              f"{row['thresholds'][0]:>7.3f} "
+              f"{row['target_shares'][1] * 100:>4.0f}% "
+              f"{'ON' if row['spill_active'] else '-':>5} "
+              f"{(row['cost_per_query'] or 0):>9.6f}")
+
+    s = report.summary
+    adm = s["admission"]
+    print(f"\n{s['n_arrivals']} requests, {s['n_completed']} completed; "
+          f"SLO attainment {s['slo_attainment']:.1%} "
+          f"(p99 {s['latency_p99']:.2f}s vs {s['slo_latency']:.0f}s SLO)")
+    print(f"cost ${s['cost_per_query']:.6f}/query "
+          f"(budget ${session.spec.admission.cost_budget_per_query}); "
+          f"executed expensive share "
+          f"{s['expensive_share_executed']:.1%} "
+          f"(decisions {s['expensive_share_decision']:.1%})")
+    print(f"spilled {s['n_spilled']} marginal requests down-tier; "
+          f"{adm['n_tighten']} tighten / {adm['n_relax']} relax actions; "
+          f"{s['n_recalibrations']} threshold hot-swaps; "
+          f"{s['n_redispatched']} failure re-dispatches")
+
+    # the controller's whole trajectory rides in the session snapshot —
+    # a replica restored from these bytes resumes mid-spill
+    snap = session.snapshot()
+    print(f"snapshot: {len(str(snap))} chars, admission state "
+          f"{sorted(snap['admission'])}")
+
+
+if __name__ == "__main__":
+    main()

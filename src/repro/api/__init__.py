@@ -34,6 +34,7 @@ from repro.api.backends import (  # noqa: F401
 )
 from repro.api.spec import (  # noqa: F401
     SCHEMA_VERSION,
+    AdmissionSpec,
     CalibrationSpec,
     CostSpec,
     RouteSpec,

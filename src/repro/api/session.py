@@ -33,6 +33,7 @@ import numpy as np
 from repro.api import backends as _backends
 from repro.api.spec import SCHEMA_VERSION, RouteSpec
 from repro.serving import _deprecation
+from repro.serving.admission import AdmissionController
 from repro.serving.pipeline import PipelineTelemetry, ServingPipeline
 from repro.serving.router_service import (BatchDispatchResult, DispatchRecord,
                                           SkewRouteDispatcher)
@@ -75,13 +76,25 @@ class SkewRouteSession:
                     cal.target_shares, window=cal.window,
                     min_samples=cal.min_samples, tolerance=cal.tolerance,
                     cooldown=cal.cooldown)
+            self.admission: Optional[AdmissionController] = None
+            if spec.admission is not None:
+                if runners is None:
+                    raise ValueError(
+                        "spec.admission is set but no runners were given; "
+                        "admission control lives on the submit() path — "
+                        "pass runners= (a {tier: callable} dict or an "
+                        "EngineBank) to repro.api.build")
+                self.admission = AdmissionController(
+                    self.dispatcher.calibrator, spec.cost_model(),
+                    spec.models(), spec.admission)
             self.pipeline: Optional[ServingPipeline] = None
             if runners is not None:
                 if isinstance(runners, EngineBankLike):
                     runners = runners.runners()
                 self.pipeline = ServingPipeline(
                     self.dispatcher, dict(runners),
-                    micro_batch=spec.micro_batch)
+                    micro_batch=spec.micro_batch,
+                    admission=self.admission)
 
     # -- views ----------------------------------------------------------------
 
@@ -169,8 +182,22 @@ class SkewRouteSession:
         with self._lock:
             return 0 if self.pipeline is None else self.pipeline.flush()
 
+    def observe_tier_load(self, tier: int, queue_depth: int,
+                          p99_latency: Optional[float] = None) -> None:
+        """Feed a replica pool's load (waiting depth + p99, nan-safe) to
+        the admission controller — whoever owns the TierSchedulers calls
+        this before submitting (see serving.loadgen.runner)."""
+        if self.admission is None:
+            raise RuntimeError(
+                "session has no admission controller; set spec.admission "
+                "(an AdmissionSpec) to enable load-aware serving")
+        with self._lock:
+            self.admission.observe_tier_load(tier, queue_depth,
+                                             p99_latency=p99_latency)
+
     def telemetry(self) -> dict:
-        """Merged dispatcher + pipeline counters (JSON-friendly)."""
+        """Merged dispatcher + pipeline + admission counters
+        (JSON-friendly)."""
         s = self.dispatcher.stats
         out = {
             "backend": self.backend.name,
@@ -180,6 +207,8 @@ class SkewRouteSession:
         }
         if self.pipeline is not None:
             out["pipeline"] = self.pipeline.stats()
+        if self.admission is not None:
+            out["admission"] = self.admission.telemetry()
         return out
 
     # -- serializable state ---------------------------------------------------
@@ -187,9 +216,11 @@ class SkewRouteSession:
     def snapshot(self) -> dict:
         """The session's complete mutable state as a JSON-serializable dict.
 
-        Covers the live thresholds, dispatcher telemetry, and the
-        streaming calibrator's exact window (ring buffer, cursor, swap
-        history) — :meth:`restore` rebuilds all of it bit-exactly.
+        Covers the live thresholds, dispatcher telemetry, the streaming
+        calibrator's exact window (ring buffer, cursor, swap history),
+        and the admission controller's full state (spill flag, pressure/
+        cost EWMAs, adjusted target shares, event log) —
+        :meth:`restore` rebuilds all of it bit-exactly.
         Pending micro-batch payloads are arbitrary Python objects and are
         NOT serializable: ``flush()`` before snapshotting.
         """
@@ -214,6 +245,8 @@ class SkewRouteSession:
                     "calibrator": (None if d.calibrator is None
                                    else d.calibrator.state_dict()),
                     "pipeline": None,
+                    "admission": (None if self.admission is None
+                                  else self.admission.state_dict()),
                 }
             if self.pipeline is not None:
                 snap["pipeline"] = self.pipeline.telemetry.state_dict()
@@ -239,15 +272,16 @@ class SkewRouteSession:
             return self._restore_locked(snap)
 
     def _restore_locked(self, snap: Mapping) -> "SkewRouteSession":
-        if self.pipeline is not None:
+        if self.pipeline is not None and self.pipeline.pending():
             depths = {t: len(q) for t, q in self.pipeline.queues.items()
                       if len(q)}
-            if depths:
-                raise RuntimeError(
-                    f"cannot restore over pending micro-batch payloads "
-                    f"(queue depths {depths}); call flush() first")
-            # executed-batch history must match the restored counters
-            self.pipeline.executed.clear()
+            raise RuntimeError(
+                f"cannot restore over pending micro-batch payloads "
+                f"(queue depths {depths}); call flush() first")
+        adm_snap = snap.get("admission")
+        if (adm_snap is None) != (self.admission is None):
+            raise ValueError("snapshot and session disagree on whether "
+                             "an admission controller is attached")
         d = self.dispatcher
         with d._lock:
             d.router = dataclasses.replace(
@@ -261,6 +295,8 @@ class SkewRouteSession:
             if cal_snap is not None:
                 d.calibrator.load_state_dict(cal_snap)
                 d.router = d.calibrator.config
+        if adm_snap is not None:
+            self.admission.load_state_dict(adm_snap)
         # pipeline presence may legitimately differ (runners are runtime,
         # not policy) — but state must never silently cross the gap
         pipe_snap = snap.get("pipeline")
@@ -277,7 +313,10 @@ class SkewRouteSession:
                 pipe_snap = PipelineTelemetry(
                     tier_counts={t: 0 for t in self.pipeline.queues}
                 ).state_dict()
-            self.pipeline.telemetry.load_state_dict(pipe_snap)
+            # the contract lives in ServingPipeline.load_telemetry: queue
+            # payloads don't round-trip, counters restore on drained
+            # queues only (and executed history resets to match)
+            self.pipeline.load_telemetry(pipe_snap)
         return self
 
     @classmethod

@@ -25,6 +25,7 @@ from typing import Any, Mapping, Optional, Sequence
 from repro.api import backends as _backends
 from repro.core.cost import CostModel
 from repro.core.router import RouterConfig
+from repro.serving.admission import AdmissionSpec
 
 SCHEMA_VERSION = 1
 
@@ -167,6 +168,11 @@ class RouteSpec:
     calibration: CalibrationSpec = dataclasses.field(
         default_factory=CalibrationSpec)
     cost: CostSpec = dataclasses.field(default_factory=CostSpec)
+    # Load-aware admission control (cost-budget feedback + SLO tier-
+    # spill); None disables it and reproduces pre-admission routing
+    # bit-for-bit. (Added with a default, so schema-version-1 payloads
+    # without the key still load.)
+    admission: Optional[AdmissionSpec] = None
     schema_version: int = SCHEMA_VERSION
 
     def __post_init__(self):
@@ -212,6 +218,18 @@ class RouteSpec:
                 f"{router.n_tiers} tiers but "
                 f"{len(self.calibration.target_shares)} calibration "
                 f"target_shares")
+        if self.admission is not None:
+            if not isinstance(self.admission, AdmissionSpec):
+                raise TypeError("admission must be an AdmissionSpec or None")
+            if self.calibration.policy != "streaming":
+                raise ValueError(
+                    "admission control requires streaming calibration — "
+                    "its window is the quantile source for budget re-fits "
+                    "and the spill marginal band; set "
+                    "calibration=CalibrationSpec(policy='streaming', ...)")
+            if router.n_tiers < 2:
+                raise ValueError("admission control needs >= 2 tiers "
+                                 "(there is nowhere to spill)")
 
     # -- derived views --------------------------------------------------------
 
@@ -251,6 +269,8 @@ class RouteSpec:
             "micro_batch": self.micro_batch,
             "calibration": self.calibration.to_dict(),
             "cost": self.cost.to_dict(),
+            "admission": (None if self.admission is None
+                          else self.admission.to_dict()),
         }
 
     @classmethod
@@ -284,6 +304,9 @@ class RouteSpec:
             if unknown:
                 raise ValueError(f"unknown CostSpec fields {sorted(unknown)}")
             d["cost"] = CostSpec(**dict(cost))
+        admission = d.get("admission")
+        if isinstance(admission, Mapping):
+            d["admission"] = AdmissionSpec.from_dict(admission)
         for key in ("thresholds", "tier_names", "tier_models"):
             if d.get(key) is not None:
                 d[key] = tuple(d[key])

@@ -3,6 +3,10 @@ scheduler with per-tier micro-batch queues, the SkewRoute dispatcher
 running the fused skew-metrics fast path, and the pipeline wiring
 dispatch → queues → engines → streaming recalibration together."""
 
+from repro.serving.admission import (  # noqa: F401
+    AdmissionController,
+    AdmissionSpec,
+)
 from repro.serving.pipeline import (  # noqa: F401
     ExecutedBatch,
     PipelineTelemetry,

@@ -1,0 +1,389 @@
+"""Cost-budget admission control with SLO-aware tier-spill.
+
+The routing policy so far reacts only to the *difficulty distribution*
+(the streaming calibrator keeps tier shares on target under drift). A
+production router must also react to *load*: budget burn walking past
+the spend ceiling, the expensive tier's replica pool saturating, p99
+blowing through the SLO. This module closes that loop — the three-way
+cost/quality/latency tension from "Cost-Aware Query Routing in RAG"
+(PAPERS.md) as a feedback controller around the existing training-free
+machinery:
+
+* **Budget loop** (slow, structural): an EWMA of realized $/query
+  (:class:`~repro.core.cost.CostModel` pricing over *executed* tiers) is
+  compared against ``cost_budget_per_query``. Over budget ⇒ *tighten*
+  the routing quantiles: shrink the expensive tier's target share,
+  re-fit thresholds from the streaming calibrator's window, and hot-swap
+  through the existing threshold-swap path
+  (:meth:`~repro.serving.router_service.SkewRouteDispatcher.apply_config`).
+  Under budget with pressure off ⇒ *relax* back toward the spec's
+  baseline shares. Mutating the calibrator's ``target_shares`` (rather
+  than fighting its swaps) keeps the two controllers convergent: drift
+  refits now aim at the admission-adjusted shares.
+
+* **Spill loop** (fast, reversible): sustained expensive-tier
+  saturation — queue depth or p99 pressure above ``spill_on`` — engages
+  *tier-spill*: requests routed to the top tier whose difficulty sits in
+  the *marginal band* just above the threshold (the ``spill_margin``
+  quantile slice of the calibrator window) are demoted one tier.
+  Genuinely hard requests keep the big model; only near-threshold calls
+  — where the paper's Fig. 3 quality gap is smallest — trade quality for
+  latency. Hysteresis (``spill_off < spill_on`` on a smoothed pressure
+  signal) makes the spill state sticky, so a burst tail doesn't flap it.
+
+Everything is deterministic, host-side, and JSON-serializable
+(``state_dict``/``load_state_dict`` ride in ``session.snapshot()``), so
+a replica restored from bytes resumes mid-spill with the same shares.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost import CostModel
+from repro.core.router import RouterConfig
+from repro.core.streaming_calibrate import StreamingCalibrator
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionSpec:
+    """Admission-control policy knobs (frozen, JSON-round-trippable —
+    rides inside :class:`repro.api.RouteSpec`).
+
+    Pressure is a unitless saturation signal for the MOST EXPENSIVE
+    tier: ``max(queue_depth / queue_depth_slo, p99 / p99_slo)``,
+    smoothed by an EWMA with weight ``pressure_beta`` on the newest
+    sample. 1.0 means "exactly at the configured limit".
+    """
+
+    cost_budget_per_query: Optional[float] = None  # $/query ceiling
+    p99_slo: Optional[float] = None                # seconds; None = ignore
+    queue_depth_slo: int = 64       # top-tier waiting depth = pressure 1.0
+    spill_on: float = 1.0           # smoothed pressure that ENGAGES spill
+    spill_off: float = 0.6          # ... and DISENGAGES it (hysteresis)
+    spill_margin: float = 0.10      # quantile band above the top cut that
+                                    # counts as "marginal" (spillable)
+    tighten_step: float = 0.05      # top-tier share removed per tighten
+    relax_step: float = 0.05        # ... restored per relax
+    deadband: float = 0.05          # budget ratio slack around 1.0
+    min_top_share: float = 0.02     # tighten floor: never starve the top
+    control_interval: int = 64      # requests between quantile actions
+    pressure_beta: float = 0.3      # EWMA weight of the newest sample
+
+    def __post_init__(self):
+        if (self.cost_budget_per_query is not None
+                and self.cost_budget_per_query <= 0):
+            raise ValueError(f"cost_budget_per_query must be > 0, got "
+                             f"{self.cost_budget_per_query}")
+        if self.p99_slo is not None and self.p99_slo <= 0:
+            raise ValueError(f"p99_slo must be > 0, got {self.p99_slo}")
+        if self.queue_depth_slo < 1:
+            raise ValueError(f"queue_depth_slo must be >= 1, got "
+                             f"{self.queue_depth_slo}")
+        if not 0.0 < self.spill_off < self.spill_on:
+            raise ValueError(
+                f"hysteresis needs 0 < spill_off < spill_on, got "
+                f"spill_off={self.spill_off}, spill_on={self.spill_on}")
+        if not 0.0 < self.spill_margin < 1.0:
+            raise ValueError(f"spill_margin must be in (0, 1), got "
+                             f"{self.spill_margin}")
+        for name in ("tighten_step", "relax_step"):
+            v = getattr(self, name)
+            if not 0.0 < v < 1.0:
+                raise ValueError(f"{name} must be in (0, 1), got {v}")
+        if not 0.0 <= self.deadband < 1.0:
+            raise ValueError(f"deadband must be in [0, 1), got "
+                             f"{self.deadband}")
+        if not 0.0 <= self.min_top_share < 1.0:
+            raise ValueError(f"min_top_share must be in [0, 1), got "
+                             f"{self.min_top_share}")
+        if self.control_interval < 1:
+            raise ValueError(f"control_interval must be >= 1, got "
+                             f"{self.control_interval}")
+        if not 0.0 < self.pressure_beta <= 1.0:
+            raise ValueError(f"pressure_beta must be in (0, 1], got "
+                             f"{self.pressure_beta}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "AdmissionSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown AdmissionSpec fields "
+                             f"{sorted(unknown)}; known: {sorted(known)}")
+        return cls(**dict(d))
+
+
+def _finite(x) -> Optional[float]:
+    """None / nan / inf -> None (the 'no signal' value)."""
+    if x is None:
+        return None
+    x = float(x)
+    return x if math.isfinite(x) else None
+
+
+class AdmissionController:
+    """The load-feedback loop wrapped around a StreamingCalibrator.
+
+    Lifecycle per dispatched batch (driven by
+    :class:`~repro.serving.pipeline.ServingPipeline`):
+
+    1. whoever owns the replica pools feeds load probes via
+       :meth:`observe_tier_load` (queue depth + p99; nan-safe);
+    2. :meth:`control_step` updates the smoothed pressure, toggles spill
+       with hysteresis, and — rate-limited by ``control_interval`` —
+       tightens/relaxes the target shares, returning a re-fit
+       :class:`RouterConfig` for the caller to hot-swap (or ``None``);
+    3. :meth:`apply` demotes this batch's marginal top-tier requests
+       while spill is engaged and folds the *executed* tier mix into the
+       $/query EWMA the budget loop watches.
+
+    The controller never swaps thresholds itself: it returns configs, the
+    dispatcher's ``apply_config`` is the one swap path (same as drift).
+    """
+
+    def __init__(self, calibrator: StreamingCalibrator,
+                 cost_model: CostModel, tier_models: Sequence[str],
+                 spec: AdmissionSpec):
+        if calibrator is None:
+            raise ValueError("admission control needs a streaming "
+                             "calibrator (its window is the quantile "
+                             "source for re-fits and the marginal band)")
+        self.calibrator = calibrator
+        self.cost_model = cost_model
+        self.tier_models = tuple(str(m) for m in tier_models)
+        self.spec = spec
+        n_tiers = calibrator.config.n_tiers
+        if len(self.tier_models) != n_tiers:
+            raise ValueError(f"{n_tiers} tiers but "
+                             f"{len(self.tier_models)} tier models")
+        if n_tiers < 2:
+            raise ValueError("admission control needs >= 2 tiers "
+                             "(there is nowhere to spill)")
+        missing = [m for m in self.tier_models
+                   if m not in cost_model.cost_per_mtok]
+        if spec.cost_budget_per_query is not None and missing:
+            raise ValueError(
+                f"cost_budget_per_query is set but tier models {missing} "
+                f"have no cost_per_mtok entry — the budget loop cannot "
+                f"price them")
+        self._tier_cost = np.asarray(
+            [cost_model.request_cost(m) if m in cost_model.cost_per_mtok
+             else 0.0 for m in self.tier_models])
+        self.top = n_tiers - 1
+        self.baseline_shares = tuple(calibrator.target_shares)
+        self.shares = tuple(calibrator.target_shares)
+        # -- mutable state (all of it JSON-serializable) ----------------------
+        self.spill_active = False
+        self.pressure = 0.0            # EWMA'd saturation signal
+        self.cost_per_query = None     # EWMA'd realized $/query
+        self.n_seen = 0                # requests that passed apply()
+        self.n_spilled = 0
+        self.n_tighten = 0
+        self.n_relax = 0
+        self.events: list[dict] = []   # spill_on/off + tighten/relax log
+        self._last_control = -spec.control_interval  # allow immediate action
+        self._tier_load: dict[int, dict] = {}
+
+    # -- load probes ----------------------------------------------------------
+
+    def observe_tier_load(self, tier: int, queue_depth: int,
+                          p99_latency: Optional[float] = None) -> None:
+        """Feed one tier's replica-pool load. ``p99_latency`` may be
+        ``nan`` (TierScheduler reports nan below its completion floor) —
+        treated as 'no latency signal', never as pressure."""
+        self._tier_load[int(tier)] = {
+            "queue_depth": int(queue_depth),
+            "p99_latency": _finite(p99_latency),
+        }
+
+    def _raw_pressure(self) -> float:
+        load = self._tier_load.get(self.top)
+        if load is None:
+            return 0.0
+        p = load["queue_depth"] / self.spec.queue_depth_slo
+        if self.spec.p99_slo is not None and load["p99_latency"] is not None:
+            p = max(p, load["p99_latency"] / self.spec.p99_slo)
+        return float(p)
+
+    # -- the control loop ------------------------------------------------------
+
+    def _event(self, kind: str, **extra) -> None:
+        self.events.append({"at_request": self.n_seen, "kind": kind,
+                            "pressure": round(self.pressure, 6),
+                            "shares": list(self.shares), **extra})
+
+    def _with_top_share(self, new_top: float) -> tuple[float, ...]:
+        """Current shares with the top tier moved to ``new_top``; lower
+        tiers rescaled so their relative proportions are preserved."""
+        cur_top = self.shares[self.top]
+        lower = 1.0 - cur_top
+        scale = (1.0 - new_top) / lower if lower > 1e-9 else 0.0
+        out = [s * scale for s in self.shares[:-1]]
+        if lower <= 1e-9:       # degenerate: everything was top tier
+            out = [(1.0 - new_top) / self.top] * self.top
+        out.append(new_top)
+        return tuple(out)
+
+    def control_step(self) -> Optional[RouterConfig]:
+        """One feedback tick. Updates pressure + spill state every call;
+        quantile tighten/relax at most once per ``control_interval``
+        requests. Returns a re-fit config to hot-swap, or ``None``."""
+        spec = self.spec
+        self.pressure += spec.pressure_beta * (self._raw_pressure()
+                                               - self.pressure)
+        if not self.spill_active and self.pressure >= spec.spill_on:
+            self.spill_active = True
+            self._event("spill_on")
+        elif self.spill_active and self.pressure <= spec.spill_off:
+            self.spill_active = False
+            self._event("spill_off")
+
+        if self.n_seen - self._last_control < spec.control_interval:
+            return None
+        budget_ratio = None
+        if (spec.cost_budget_per_query is not None
+                and self.cost_per_query is not None):
+            budget_ratio = self.cost_per_query / spec.cost_budget_per_query
+        over_budget = (budget_ratio is not None
+                       and budget_ratio > 1.0 + spec.deadband)
+        saturated = self.pressure >= spec.spill_on
+        slack = (self.pressure <= spec.spill_off
+                 and (budget_ratio is None
+                      or budget_ratio < 1.0 - spec.deadband))
+
+        top = self.shares[self.top]
+        new_shares = None
+        if (over_budget or saturated) and top > spec.min_top_share:
+            new_shares = self._with_top_share(
+                max(spec.min_top_share, top - spec.tighten_step))
+            kind = "tighten"
+        elif slack and top < self.baseline_shares[self.top] - 1e-9:
+            new_shares = self._with_top_share(
+                min(self.baseline_shares[self.top], top + spec.relax_step))
+            kind = "relax"
+        if new_shares is None:
+            return None
+        # Re-fit needs a populated window; until then only the share
+        # target moves (the calibrator's own drift loop will converge it).
+        if len(self.calibrator.window) < self.calibrator.min_samples:
+            return None
+        self.shares = new_shares
+        self.calibrator.target_shares = new_shares  # drift loop now aims here
+        self._last_control = self.n_seen
+        if kind == "tighten":
+            self.n_tighten += 1
+        else:
+            self.n_relax += 1
+        new_config = self.calibrator.fit_config()
+        self._event(kind, budget_ratio=(None if budget_ratio is None
+                                        else round(budget_ratio, 6)),
+                    new_thresholds=list(new_config.thresholds))
+        return new_config
+
+    # -- spill ----------------------------------------------------------------
+
+    def marginal_cutoff(self) -> float:
+        """Difficulty value bounding the marginal band: the calibrator
+        window quantile ``spill_margin`` above the top-tier cut. Top-tier
+        requests AT OR BELOW it are the near-threshold calls spill may
+        demote; ``nan`` while the window is too small to judge."""
+        if len(self.calibrator.window) < self.calibrator.min_samples:
+            return float("nan")
+        cut = 1.0 - self.shares[self.top]
+        q = min(1.0, cut + self.spec.spill_margin)
+        return float(self.calibrator.window.quantile(q))
+
+    def apply(self, tiers: np.ndarray,
+              difficulty: np.ndarray) -> tuple[np.ndarray, int]:
+        """Demote this batch's marginal top-tier requests while spill is
+        engaged; always folds the *executed* mix into the $/query EWMA.
+        Returns (possibly-adjusted tiers, number spilled)."""
+        tiers = np.asarray(tiers)
+        n = len(tiers)
+        if n == 0:
+            return tiers, 0
+        spilled = 0
+        if self.spill_active:
+            cutoff = self.marginal_cutoff()
+            if math.isfinite(cutoff):
+                marginal = (tiers == self.top) & (np.asarray(difficulty)
+                                                  <= cutoff)
+                spilled = int(marginal.sum())
+                if spilled:
+                    tiers = tiers.copy()
+                    tiers[marginal] = self.top - 1
+        self.n_seen += n
+        self.n_spilled += spilled
+        batch_cost = float(self._tier_cost[tiers].mean())
+        if self.cost_per_query is None:
+            self.cost_per_query = batch_cost
+        else:
+            self.cost_per_query += self.spec.pressure_beta * (
+                batch_cost - self.cost_per_query)
+        return tiers, spilled
+
+    # -- telemetry / serializable state ---------------------------------------
+
+    def telemetry(self) -> dict:
+        return {
+            "spill_active": self.spill_active,
+            "pressure": self.pressure,
+            "cost_per_query": self.cost_per_query,
+            "target_shares": list(self.shares),
+            "baseline_shares": list(self.baseline_shares),
+            "n_seen": self.n_seen,
+            "n_spilled": self.n_spilled,
+            "n_tighten": self.n_tighten,
+            "n_relax": self.n_relax,
+            "n_events": len(self.events),
+            "tier_load": {str(t): dict(v)
+                          for t, v in self._tier_load.items()},
+        }
+
+    def state_dict(self) -> dict:
+        """Complete mutable state, JSON-friendly (knobs live in the spec,
+        baseline shares in the calibration spec — policy, not state)."""
+        return {
+            "shares": list(self.shares),
+            "spill_active": self.spill_active,
+            "pressure": self.pressure,
+            "cost_per_query": self.cost_per_query,
+            "n_seen": self.n_seen,
+            "n_spilled": self.n_spilled,
+            "n_tighten": self.n_tighten,
+            "n_relax": self.n_relax,
+            "last_control": self._last_control,
+            "events": [dict(e) for e in self.events],
+            "tier_load": {str(t): dict(v)
+                          for t, v in self._tier_load.items()},
+        }
+
+    def load_state_dict(self, state: Mapping) -> None:
+        shares = tuple(float(s) for s in state["shares"])
+        if len(shares) != len(self.shares):
+            raise ValueError(f"admission state has {len(shares)} tier "
+                             f"shares, controller has {len(self.shares)}")
+        self.shares = shares
+        self.calibrator.target_shares = shares  # keep the loops convergent
+        self.spill_active = bool(state["spill_active"])
+        self.pressure = float(state["pressure"])
+        cpq = state["cost_per_query"]
+        self.cost_per_query = None if cpq is None else float(cpq)
+        self.n_seen = int(state["n_seen"])
+        self.n_spilled = int(state["n_spilled"])
+        self.n_tighten = int(state["n_tighten"])
+        self.n_relax = int(state["n_relax"])
+        self._last_control = int(state["last_control"])
+        self.events = [dict(e) for e in state["events"]]
+        self._tier_load = {
+            int(t): {"queue_depth": int(v["queue_depth"]),
+                     "p99_latency": _finite(v["p99_latency"])}
+            for t, v in state["tier_load"].items()}

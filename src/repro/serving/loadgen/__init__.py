@@ -1,0 +1,32 @@
+"""Deterministic workload simulation for load-aware serving.
+
+``workload`` — seeded trace generators (diurnal rate, Poisson/bursty
+arrivals, retrieval-score-skew drift, replica-failure injection) behind
+a small JSON trace spec, so the exact same stress trace replays across
+PRs and machines.
+
+``runner`` — replays a trace through a :class:`repro.api.SkewRouteSession`
+and per-tier :class:`~repro.serving.scheduler.TierScheduler` replica
+pools, feeding load probes to the admission controller and recording the
+per-step telemetry trajectory (queue depths, thresholds, spill, budget
+burn, SLO attainment).
+"""
+
+from repro.serving.loadgen.workload import (  # noqa: F401
+    CANONICAL_TRACES,
+    BurstSpec,
+    DriftSpec,
+    FailureSpec,
+    TraceSpec,
+    WorkloadStep,
+    canonical_trace,
+    generate,
+)
+from repro.serving.loadgen.runner import (  # noqa: F401
+    LoadReport,
+    LoadRunner,
+    SimRequest,
+    canonical_load_runner,
+    make_pool_runners,
+    make_pools,
+)

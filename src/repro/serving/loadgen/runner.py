@@ -1,0 +1,313 @@
+"""Trace replay: a `TraceSpec` driven through a `SkewRouteSession` and
+per-tier `TierScheduler` replica pools, end to end.
+
+Per simulator tick the runner
+
+1. applies the trace's failure events to the replica pools
+   (``mark_unhealthy`` / ``mark_healthy``);
+2. feeds each pool's load probes (waiting depth, nan-safe p99) to the
+   session's admission controller, when one is attached;
+3. routes the tick's arrivals through ``session.submit`` — dispatch,
+   admission control-step, spill, micro-batch queues — with the tier
+   runners landing requests on the pools (``make_pool_runners``), then
+   flushes partial micro-batches so queueing delay stays bounded by one
+   tick;
+4. advances every pool's simulated clock;
+5. records one telemetry row: arrivals, per-tier queue depth, live
+   thresholds, spill/pressure/budget state — the trajectory the bench
+   plots and the tests assert on.
+
+After the trace the pools drain to empty and the run folds into a
+:class:`LoadReport` (JSON-friendly): SLO attainment, realized $/query
+over the *executed* tier mix, expensive-tier shares (decision vs
+executed), a share-weighted quality proxy, spill/recalibration/failure
+counters, and the full per-step trajectory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost import PAPER_QUALITY
+from repro.serving.loadgen.workload import TraceSpec, generate
+from repro.serving.scheduler import Replica, Request, TierScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class SimRequest:
+    """The payload flowing through the micro-batch queues: identity plus
+    the timing contract (latency is measured submitted -> finished)."""
+
+    request_id: int
+    submitted_at: float
+    deadline: float
+    prompt_len: int = 1873      # paper Fig 2a: KG-RAG prompt, 100 triples
+    max_new: int = 120
+
+
+def make_pools(replica_speeds: Mapping[int, Sequence[float]],
+               batch_slots: Optional[Mapping[int, int]] = None,
+               base_token_time: float = 0.01) -> dict[int, TierScheduler]:
+    """Replica pools from {tier: [per-replica speed multipliers]}."""
+    slots = batch_slots or {}
+    return {
+        int(t): TierScheduler(
+            int(t), [Replica(i, int(t), speed=float(s))
+                     for i, s in enumerate(speeds)],
+            batch_slots=int(slots.get(t, 8)),
+            base_token_time=base_token_time)
+        for t, speeds in replica_speeds.items()}
+
+
+def make_pool_runners(pools: Mapping[int, TierScheduler]):
+    """{tier: runner} for ``repro.api.build(spec, runners=...)``: each
+    micro-batch of :class:`SimRequest` payloads becomes scheduler
+    Requests admitted to that tier's replica pool."""
+    def _make(tier: int):
+        def run(batch: list) -> list[Request]:
+            reqs = [Request(request_id=p.request_id, tier=tier,
+                            prompt_len=p.prompt_len, max_new=p.max_new,
+                            deadline=p.deadline,
+                            submitted_at=p.submitted_at)
+                    for p in batch]
+            pools[tier].submit_batch(reqs)
+            return reqs
+        return run
+    return {t: _make(t) for t in pools}
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """One trace replay: the spec, per-step trajectory, and summary."""
+
+    trace: dict
+    steps: list[dict]
+    summary: dict
+
+    def to_dict(self) -> dict:
+        return {"trace": self.trace, "steps": self.steps,
+                "summary": self.summary}
+
+
+def _default_tier_quality(models: Sequence[str]) -> tuple[float, ...]:
+    """Quality proxy per tier: paper Table-3 CWQ F1 where the tier model
+    is a paper model id, else an index-proportional stand-in — only the
+    ORDERING and spread matter (the proxy weights executed shares)."""
+    table = PAPER_QUALITY["cwq"]
+    return tuple(
+        float(table[m]["f1"]) if m in table else 40.0 + 10.0 * (i + 1)
+        for i, m in enumerate(models))
+
+
+def canonical_load_runner(with_admission: bool, trace: TraceSpec,
+                          slo_latency: float = 1.0,
+                          base_token_time: float = 8e-5,
+                          record_every: int = 1) -> "LoadRunner":
+    """The tuned serving setup the canonical traces are stressed against
+    (shared by benchmarks/load_sim_bench.py, CI, tests, and the example
+    so they all measure the same thing):
+
+    * 2 tiers, qwen7b/qwen72b paper pricing, entropy metric, streaming
+      calibration at a 70/30 split;
+    * cheap tier provisioned with real headroom (8 replicas at 2x) —
+      spill only helps when there is somewhere to spill TO; expensive
+      tier sized for the calm era (3 replicas at 0.5x), so the
+      burst+drift eras saturate it;
+    * admission (when on): $3e-4/query budget — binding once drift
+      pushes traffic up-tier — and queue/p99 SLO pressure with
+      hysteresis spill.
+    """
+    from repro.api import (AdmissionSpec, CalibrationSpec,  # lazy: keep
+                           RouteSpec, build)  # serving -> api edge soft
+    admission = AdmissionSpec(
+        cost_budget_per_query=3e-4, p99_slo=slo_latency,
+        queue_depth_slo=24, control_interval=32,
+        spill_on=1.0, spill_off=0.5) if with_admission else None
+    spec = RouteSpec(
+        metric="entropy", thresholds=(6.0,), top_k=trace.top_k,
+        tier_names=("qwen7b", "qwen72b"),
+        calibration=CalibrationSpec(
+            policy="streaming", target_shares=(0.7, 0.3), window=512,
+            min_samples=64, tolerance=0.08, cooldown=128),
+        admission=admission)
+    pools = make_pools({0: [2.0] * 8, 1: [0.5] * 3},
+                       batch_slots={0: 32, 1: 8},
+                       base_token_time=base_token_time)
+    session = build(spec, runners=make_pool_runners(pools))
+    return LoadRunner(session, pools, slo_latency=slo_latency,
+                      record_every=record_every)
+
+
+class LoadRunner:
+    """Replays traces through one session + replica-pool topology."""
+
+    def __init__(self, session, pools: Mapping[int, TierScheduler],
+                 slo_latency: float = 30.0,
+                 tier_quality: Optional[Sequence[float]] = None,
+                 record_every: int = 1,
+                 p99_horizon: Optional[float] = None):
+        tiers = set(range(session.spec.n_tiers))
+        if set(pools) != tiers:
+            raise ValueError(f"pools for tiers {sorted(pools)} but the "
+                             f"session routes tiers {sorted(tiers)}")
+        if session.pipeline is None:
+            raise ValueError("session has no pipeline; build it with "
+                             "runners=make_pool_runners(pools)")
+        if slo_latency <= 0:
+            raise ValueError(f"slo_latency must be > 0, got {slo_latency}")
+        if record_every < 1:
+            raise ValueError(f"record_every must be >= 1, "
+                             f"got {record_every}")
+        self.session = session
+        self.pools = dict(pools)
+        self.slo_latency = float(slo_latency)
+        models = session.spec.models()
+        self.tier_quality = tuple(
+            float(q) for q in (tier_quality if tier_quality is not None
+                               else _default_tier_quality(models)))
+        if len(self.tier_quality) != len(models):
+            raise ValueError(f"{len(models)} tiers but "
+                             f"{len(self.tier_quality)} tier_quality values")
+        self.record_every = int(record_every)
+        # latency-pressure probes only look this far back: an SLO
+        # controller needs the current tail, and a tier that went quiet
+        # after tightening would otherwise show its burst-era p99 forever
+        self.p99_horizon = (float(p99_horizon) if p99_horizon is not None
+                            else 5.0 * self.slo_latency)
+        self._next_id = 0
+
+    # -- per-tick pieces -------------------------------------------------------
+
+    def _apply_events(self, events, now: float) -> list[dict]:
+        applied = []
+        for ev in events:
+            pool = self.pools[ev.tier]
+            if ev.kind == "down":
+                pool.mark_unhealthy(ev.replica)
+            else:
+                pool.mark_healthy(ev.replica, speed=ev.speed)
+            applied.append({"time": now, "tier": ev.tier,
+                            "replica": ev.replica, "kind": ev.kind})
+        return applied
+
+    def _feed_load_probes(self) -> None:
+        if getattr(self.session, "admission", None) is None:
+            return
+        for t, pool in self.pools.items():
+            self.session.observe_tier_load(
+                t, pool.queue_depth(),
+                p99_latency=pool.p99_latency(horizon=self.p99_horizon))
+
+    def _record_step(self, wstep, now: float) -> dict:
+        adm = getattr(self.session, "admission", None)
+        row = {
+            "step": wstep.step,
+            "time": now,
+            "arrivals": wstep.n_arrivals,
+            "queue_depths": {str(t): p.queue_depth()
+                             for t, p in self.pools.items()},
+            "inflight": {str(t): len(p.inflight)
+                         for t, p in self.pools.items()},
+            "thresholds": [float(x) for x in self.session.thresholds],
+        }
+        if adm is not None:
+            row.update(spill_active=adm.spill_active,
+                       pressure=round(adm.pressure, 6),
+                       n_spilled=adm.n_spilled,
+                       cost_per_query=adm.cost_per_query,
+                       target_shares=list(adm.shares))
+        return row
+
+    # -- the replay ------------------------------------------------------------
+
+    def run(self, spec: TraceSpec) -> LoadReport:
+        steps: list[dict] = []
+        failure_log: list[dict] = []
+        n_arrivals = 0
+        now = 0.0
+        for wstep in generate(spec):
+            now = wstep.time
+            failure_log.extend(self._apply_events(wstep.events, now))
+            self._feed_load_probes()
+            n = wstep.n_arrivals
+            if n:
+                payloads = [
+                    SimRequest(request_id=self._next_id + i,
+                               submitted_at=now,
+                               deadline=now + self.slo_latency)
+                    for i in range(n)]
+                self._next_id += n
+                n_arrivals += n
+                self.session.submit(wstep.scores, payloads)
+                # bound micro-batch queueing delay to one tick
+                self.session.flush()
+            for pool in self.pools.values():
+                pool.step(now)
+            if wstep.step % self.record_every == 0:
+                steps.append(self._record_step(wstep, now))
+        self.session.flush()
+        now = self._drain(now, spec.dt)
+        return LoadReport(trace=spec.to_dict(), steps=steps,
+                          summary=self._summary(n_arrivals, now,
+                                                failure_log))
+
+    def _drain(self, now: float, dt: float, max_iters: int = 100000) -> float:
+        for _ in range(max_iters):
+            if not any(p.pending or p.inflight for p in self.pools.values()):
+                return now
+            now += max(dt, 0.05)
+            for p in self.pools.values():
+                p.step(now)
+        raise RuntimeError(
+            "replica pools failed to drain (a replica left unhealthy "
+            "forever, or work outpaces capacity unboundedly)")
+
+    def _summary(self, n_arrivals: int, end_time: float,
+                 failure_log: list[dict]) -> dict:
+        done = [r for p in self.pools.values() for r in p.done]
+        lats = np.asarray([r.finished_at - r.submitted_at for r in done
+                           if r.finished_at is not None])
+        slo_ok = int((lats <= self.slo_latency).sum()) if lats.size else 0
+        pipe = self.session.pipeline.telemetry
+        executed = {int(t): int(c) for t, c in pipe.tier_counts.items()}
+        n_exec = max(sum(executed.values()), 1)
+        models = self.session.spec.models()
+        cost_model = self.session.spec.cost_model()
+        cost_total = sum(
+            (cost_model.request_cost(models[t])
+             if models[t] in cost_model.cost_per_mtok else 0.0) * c
+            for t, c in executed.items())
+        top = len(models) - 1
+        decisions = self.session.stats.tier_counts
+        adm = getattr(self.session, "admission", None)
+        summary = {
+            "n_arrivals": n_arrivals,
+            "n_completed": len(done),
+            "end_time": end_time,
+            "slo_latency": self.slo_latency,
+            # completed-but-late AND never-completed both count as misses
+            "slo_attainment": slo_ok / max(n_arrivals, 1),
+            "latency_mean": float(lats.mean()) if lats.size else math.nan,
+            "latency_p99": (float(np.percentile(lats, 99))
+                            if lats.size else math.nan),
+            "cost_per_query": cost_total / n_exec,
+            "quality_proxy": sum(self.tier_quality[t] * c
+                                 for t, c in executed.items()) / n_exec,
+            "expensive_share_executed": executed.get(top, 0) / n_exec,
+            "expensive_share_decision": (
+                decisions.get(top, 0) / max(sum(decisions.values()), 1)),
+            "tier_counts_executed": {str(t): c for t, c in executed.items()},
+            "n_spilled": pipe.n_spilled,
+            "n_recalibrations": self.session.stats.n_recalibrations,
+            "n_redispatched": sum(1 for r in done if r.redispatched),
+            "failures": failure_log,
+            "tier_p99": {str(t): p.p99_latency()
+                         for t, p in self.pools.items()},
+        }
+        if adm is not None:
+            summary["admission"] = adm.telemetry()
+        return summary

@@ -1,0 +1,289 @@
+"""Seeded, replayable workload traces: the standing serving stress test.
+
+A :class:`TraceSpec` is a small frozen value (JSON-round-trippable, same
+discipline as `RouteSpec`) describing a traffic scenario:
+
+* **arrivals** — per-step Poisson draws around a base rate, modulated by
+  a diurnal sinusoid and piecewise burst multipliers;
+* **drift** — the synthetic retrieval-score *skew* distribution shifts
+  over time: each segment draws per-request power-law decay exponents
+  from its own ``[alpha_lo, alpha_hi]`` range (flat rows = hard queries,
+  spiky rows = easy — the same construction the calibrator tests use),
+  so thresholds calibrated on one era walk off target in the next;
+* **failures** — replica down/up events at fixed steps, driven into
+  ``TierScheduler.mark_unhealthy / mark_healthy`` by the runner.
+
+Everything derives from one `numpy` Generator seeded from the spec and
+consumed in a fixed order, so the same spec JSON yields bit-identical
+score batches anywhere — a trace IS a regression test.
+
+Trace spec JSON schema (all fields optional except name/steps):
+
+    {"name": "bursty", "seed": 7, "steps": 400, "dt": 0.05,
+     "top_k": 100, "base_rate": 6.0, "max_batch": 256,
+     "diurnal_amplitude": 0.3, "diurnal_period": 200.0,
+     "bursts":   [{"start": 120, "length": 80, "multiplier": 4.0}],
+     "drift":    [{"start": 0,   "alpha_lo": 1.0, "alpha_hi": 2.5},
+                  {"start": 200, "alpha_lo": 0.1, "alpha_hi": 0.9}],
+     "failures": [{"tier": 1, "replica": 0, "down_at": 150,
+                   "up_at": 260, "speed": 0.35}]}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Iterator, Mapping, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstSpec:
+    """Arrival-rate multiplier over ``[start, start + length)`` steps."""
+
+    start: int
+    length: int
+    multiplier: float
+
+    def __post_init__(self):
+        if self.start < 0 or self.length < 1:
+            raise ValueError(f"burst needs start >= 0 and length >= 1, got "
+                             f"start={self.start}, length={self.length}")
+        if self.multiplier <= 0:
+            raise ValueError(f"burst multiplier must be > 0, got "
+                             f"{self.multiplier}")
+
+    def active(self, step: int) -> bool:
+        return self.start <= step < self.start + self.length
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """From ``start`` on, score rows decay with alpha ~ U[lo, hi].
+    Smaller alphas = flatter score curves = harder queries."""
+
+    start: int
+    alpha_lo: float
+    alpha_hi: float
+
+    def __post_init__(self):
+        if self.start < 0:
+            raise ValueError(f"drift start must be >= 0, got {self.start}")
+        if not 0 < self.alpha_lo <= self.alpha_hi:
+            raise ValueError(f"drift needs 0 < alpha_lo <= alpha_hi, got "
+                             f"[{self.alpha_lo}, {self.alpha_hi}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSpec:
+    """Replica ``replica`` of tier ``tier`` goes down at step ``down_at``
+    and recovers (at ``speed``) at step ``up_at``."""
+
+    tier: int
+    replica: int
+    down_at: int
+    up_at: int
+    speed: float = 1.0
+
+    def __post_init__(self):
+        if self.tier < 0 or self.replica < 0:
+            raise ValueError("failure tier/replica must be >= 0")
+        if not 0 <= self.down_at < self.up_at:
+            raise ValueError(f"failure needs 0 <= down_at < up_at, got "
+                             f"down_at={self.down_at}, up_at={self.up_at}")
+        if self.speed <= 0:
+            raise ValueError(f"recovery speed must be > 0, got {self.speed}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """One serving scenario as a frozen, seeded, JSON-serializable value."""
+
+    name: str
+    steps: int
+    seed: int = 0
+    dt: float = 0.05            # simulated seconds per step
+    top_k: int = 100            # retrieval depth of the score rows
+    base_rate: float = 8.0      # mean arrivals per step (Poisson)
+    max_batch: int = 256        # arrivals-per-step cap (bounds memory)
+    diurnal_amplitude: float = 0.0   # rate *= 1 + A sin(2π step / period)
+    diurnal_period: Optional[float] = None
+    bursts: tuple[BurstSpec, ...] = ()
+    drift: tuple[DriftSpec, ...] = (DriftSpec(0, 0.2, 2.5),)
+    failures: tuple[FailureSpec, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "bursts", tuple(self.bursts))
+        object.__setattr__(self, "drift", tuple(self.drift))
+        object.__setattr__(self, "failures", tuple(self.failures))
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.dt <= 0:
+            raise ValueError(f"dt must be > 0, got {self.dt}")
+        if self.top_k < 2:
+            raise ValueError(f"top_k must be >= 2, got {self.top_k}")
+        if self.base_rate < 0:
+            raise ValueError(f"base_rate must be >= 0, got {self.base_rate}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if not 0.0 <= self.diurnal_amplitude < 1.0:
+            raise ValueError(f"diurnal_amplitude must be in [0, 1), got "
+                             f"{self.diurnal_amplitude}")
+        if self.diurnal_amplitude > 0 and (self.diurnal_period is None
+                                           or self.diurnal_period <= 0):
+            raise ValueError("diurnal_amplitude > 0 needs a positive "
+                             "diurnal_period")
+        if not self.drift:
+            raise ValueError("at least one drift segment is required")
+        starts = [seg.start for seg in self.drift]
+        if starts != sorted(starts) or starts[0] != 0:
+            raise ValueError(f"drift segments must be sorted by start and "
+                             f"begin at step 0, got starts {starts}")
+
+    # -- the deterministic schedule -------------------------------------------
+
+    def rate(self, step: int) -> float:
+        """Mean arrivals at ``step``: base x diurnal x active bursts."""
+        r = self.base_rate
+        if self.diurnal_amplitude > 0:
+            r *= 1.0 + self.diurnal_amplitude * math.sin(
+                2.0 * math.pi * step / self.diurnal_period)
+        for burst in self.bursts:
+            if burst.active(step):
+                r *= burst.multiplier
+        return r
+
+    def drift_segment(self, step: int) -> DriftSpec:
+        seg = self.drift[0]
+        for candidate in self.drift:
+            if candidate.start <= step:
+                seg = candidate
+        return seg
+
+    # -- serialization --------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TraceSpec":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown TraceSpec fields {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        for key, sub in (("bursts", BurstSpec), ("drift", DriftSpec),
+                         ("failures", FailureSpec)):
+            if d.get(key) is not None:
+                d[key] = tuple(x if isinstance(x, sub) else sub(**dict(x))
+                               for x in d[key])
+        return cls(**d)
+
+    def to_json(self, **kwargs) -> str:
+        return json.dumps(self.to_dict(), **kwargs)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "TraceSpec":
+        return cls.from_dict(json.loads(payload))
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """A health transition the runner must apply at this step."""
+
+    tier: int
+    replica: int
+    kind: str           # "down" | "up"
+    speed: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadStep:
+    """One simulator tick: the arrivals' score rows + failure events."""
+
+    step: int
+    time: float
+    scores: np.ndarray            # [n, top_k] descending float32
+    events: tuple[FailureEvent, ...] = ()
+
+    @property
+    def n_arrivals(self) -> int:
+        return int(self.scores.shape[0])
+
+
+def _power_law_scores(rng: np.random.Generator, n: int, k: int,
+                      alpha_lo: float, alpha_hi: float) -> np.ndarray:
+    """Synthetic descending top-K retrieval scores: per-row power-law
+    decay with alpha ~ U[lo, hi] plus 5% multiplicative noise (the
+    construction shared with the calibrator tests — flat rows are
+    'hard', spiky rows 'easy')."""
+    if n == 0:
+        return np.empty((0, k), np.float32)
+    alphas = rng.uniform(alpha_lo, alpha_hi, n)
+    base = 1.0 / np.arange(1, k + 1)[None, :] ** alphas[:, None]
+    noise = rng.uniform(0.95, 1.05, (n, k))
+    return np.sort((base * noise).astype(np.float32),
+                   axis=1)[:, ::-1].copy()
+
+
+def generate(spec: TraceSpec) -> Iterator[WorkloadStep]:
+    """Replay ``spec`` deterministically: one Generator seeded from the
+    spec, consumed in fixed (arrival-count, then scores) order per step —
+    same spec, same platform-independent stream of batches."""
+    rng = np.random.default_rng(spec.seed)
+    events_at: dict[int, list[FailureEvent]] = {}
+    for f in spec.failures:
+        events_at.setdefault(f.down_at, []).append(
+            FailureEvent(f.tier, f.replica, "down"))
+        events_at.setdefault(f.up_at, []).append(
+            FailureEvent(f.tier, f.replica, "up", speed=f.speed))
+    for step in range(spec.steps):
+        n = min(int(rng.poisson(spec.rate(step))), spec.max_batch)
+        seg = spec.drift_segment(step)
+        scores = _power_law_scores(rng, n, spec.top_k,
+                                   seg.alpha_lo, seg.alpha_hi)
+        yield WorkloadStep(step=step, time=step * spec.dt, scores=scores,
+                           events=tuple(events_at.get(step, ())))
+
+
+# -- canonical traces (the standing stress tests; referenced by name from
+#    benchmarks/load_sim_bench.py, CI, tests, and the example) ----------------
+
+CANONICAL_TRACES: dict[str, TraceSpec] = {
+    # THE acceptance trace: easy-era calibration, then a 4x burst landing
+    # together with a hard-shift drift AND a large-tier replica failure —
+    # the expensive tier saturates unless admission reacts.
+    "bursty_drift_saturation": TraceSpec(
+        name="bursty_drift_saturation", seed=7, steps=400, dt=0.05,
+        top_k=100, base_rate=6.0, max_batch=192,
+        diurnal_amplitude=0.3, diurnal_period=200.0,
+        bursts=(BurstSpec(start=120, length=120, multiplier=4.0),),
+        drift=(DriftSpec(0, 1.0, 2.5), DriftSpec(140, 0.1, 0.9)),
+        failures=(FailureSpec(tier=1, replica=0, down_at=150, up_at=280,
+                              speed=0.35),)),
+    # A day in fifty seconds: smooth diurnal swing, no shocks — the
+    # "does the controller stay quiet when nothing is wrong" trace.
+    "diurnal_calm": TraceSpec(
+        name="diurnal_calm", seed=11, steps=300, dt=0.05, top_k=100,
+        base_rate=5.0, diurnal_amplitude=0.5, diurnal_period=150.0,
+        drift=(DriftSpec(0, 0.8, 2.2),)),
+    # CI-sized cut of the acceptance trace: same shape, ~4x shorter.
+    "smoke": TraceSpec(
+        name="smoke", seed=7, steps=120, dt=0.05, top_k=50,
+        base_rate=5.0, max_batch=96,
+        bursts=(BurstSpec(start=30, length=50, multiplier=4.0),),
+        drift=(DriftSpec(0, 1.0, 2.5), DriftSpec(40, 0.1, 0.9)),
+        failures=(FailureSpec(tier=1, replica=0, down_at=40, up_at=90,
+                              speed=0.35),)),
+}
+
+
+def canonical_trace(name: str) -> TraceSpec:
+    try:
+        return CANONICAL_TRACES[name]
+    except KeyError:
+        raise KeyError(f"unknown canonical trace {name!r}; choose from "
+                       f"{sorted(CANONICAL_TRACES)}") from None

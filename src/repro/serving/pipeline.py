@@ -1,5 +1,6 @@
 """The pipelined serving flow: dispatch → micro-batch queues → engines,
-with streaming recalibration folded in.
+with streaming recalibration and (optionally) load-aware admission
+control folded in.
 
 One :class:`ServingPipeline` owns
 
@@ -11,13 +12,26 @@ StreamingCalibrator` hot-swapping thresholds inline);
     tier engines always execute full, shape-stable micro-batches;
   * per-tier runner callables (an :class:`~repro.serving.engine.\
 EngineBank`'s ``runners()`` in production, fakes in tests);
+  * optionally an :class:`~repro.serving.admission.AdmissionController`
+    (``admission=``): each submit runs one feedback tick (pressure /
+    budget → threshold hot-swap) and, while spill is engaged, demotes
+    marginal top-tier requests one tier before they queue. With
+    ``admission=None`` the flow is exactly the pre-admission pipeline —
+    bit-for-bit identical routing decisions;
   * telemetry: queue depths, executed batches, recalibration count,
-    tier mix.
+    spill count, tier mix.
 
 The flow is synchronous by design — the parallelism lives inside the
 jitted kernels and engine steps; the host-side control plane stays a
 deterministic, testable state machine (same philosophy as TierScheduler's
 simulated clocks).
+
+Tier accounting with admission enabled: ``dispatcher.stats.tier_counts``
+records the routing *decisions* (pre-spill) while
+``pipeline.telemetry.tier_counts`` records the *executed* mix
+(post-spill) — the gap between them is exactly the spilled traffic, and
+realized spend follows the executed mix (the admission controller's
+$/query EWMA; ``dispatcher.stats.total_cost`` stays decision-priced).
 """
 
 from __future__ import annotations
@@ -28,6 +42,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.serving import _deprecation
+from repro.serving.admission import AdmissionController
 from repro.serving.router_service import (BatchDispatchResult,
                                           SkewRouteDispatcher)
 from repro.serving.scheduler import MicroBatchQueue
@@ -44,10 +59,20 @@ class ExecutedBatch:
 
 @dataclasses.dataclass
 class PipelineTelemetry:
+    """Pipeline counters. Serialization contract (state_dict): counters
+    ONLY — pending micro-batch queue payloads are arbitrary Python
+    objects and are NOT part of telemetry state. The invariant
+    ``n_submitted == n_executed + pending queue depth`` therefore only
+    survives a state round-trip on DRAINED queues: flush() before
+    saving, and restore through :meth:`ServingPipeline.load_telemetry`
+    (which refuses non-empty queues) so pending items are never double-
+    nor zero-executed."""
+
     n_submitted: int = 0
     n_executed: int = 0
     n_microbatches: int = 0
     n_recalibrations: int = 0
+    n_spilled: int = 0
     tier_counts: dict = dataclasses.field(default_factory=dict)
 
     def snapshot(self, queues: dict[int, MicroBatchQueue]) -> dict:
@@ -65,6 +90,7 @@ class PipelineTelemetry:
             "n_executed": self.n_executed,
             "n_microbatches": self.n_microbatches,
             "n_recalibrations": self.n_recalibrations,
+            "n_spilled": self.n_spilled,
             "tier_counts": {str(t): c for t, c in self.tier_counts.items()},
         }
 
@@ -73,6 +99,8 @@ class PipelineTelemetry:
         self.n_executed = int(state["n_executed"])
         self.n_microbatches = int(state["n_microbatches"])
         self.n_recalibrations = int(state["n_recalibrations"])
+        # absent in pre-admission snapshots; those never spilled
+        self.n_spilled = int(state.get("n_spilled", 0))
         self.tier_counts = {int(t): int(c)
                             for t, c in state["tier_counts"].items()}
 
@@ -82,7 +110,8 @@ class ServingPipeline:
 
     def __init__(self, dispatcher: SkewRouteDispatcher,
                  runners: dict[int, Callable[[list], object]],
-                 micro_batch: int = 8):
+                 micro_batch: int = 8,
+                 admission: Optional[AdmissionController] = None):
         _deprecation.warn_once(
             "ServingPipeline",
             "hand-wiring ServingPipeline is deprecated; declare the policy "
@@ -92,8 +121,12 @@ class ServingPipeline:
         missing = set(range(n_tiers)) - set(runners)
         if missing:
             raise ValueError(f"runners missing for tiers {sorted(missing)}")
+        if admission is not None and dispatcher.calibrator is None:
+            raise ValueError("admission control requires a dispatcher with "
+                             "an attached streaming calibrator")
         self.dispatcher = dispatcher
         self.runners = dict(runners)
+        self.admission = admission
         self.queues = {t: MicroBatchQueue(t, micro_batch)
                        for t in range(n_tiers)}
         self.telemetry = PipelineTelemetry(
@@ -120,7 +153,10 @@ class ServingPipeline:
         ``payloads``: per-request items handed to the tier runner (prompt
         token arrays in production); defaults to the dispatch records.
         Returns the dispatch result (tiers, difficulty, all four metrics,
-        whether a drift hot-swap fired).
+        whether a drift hot-swap fired). With an admission controller
+        attached, requests execute on ``admission.apply``'s possibly
+        down-spilled tiers; the returned result still reports the
+        dispatcher's decisions.
         """
         scores = np.asarray(scores_desc)
         if payloads is not None and len(payloads) != scores.shape[0]:
@@ -128,13 +164,22 @@ class ServingPipeline:
                              f"{len(payloads)} payloads")
         res: BatchDispatchResult = self.dispatcher.dispatch_batch(
             scores, n_valid=n_valid, return_details=True)
+        exec_tiers = res.tiers
+        if self.admission is not None:
+            new_config = self.admission.control_step()
+            if new_config is not None:
+                self.dispatcher.apply_config(new_config)
+                self.telemetry.n_recalibrations += 1
+            exec_tiers, n_spilled = self.admission.apply(res.tiers,
+                                                         res.difficulty)
+            self.telemetry.n_spilled += n_spilled
         # per-request records are lazy; only build them when they ARE the
         # payloads — with explicit payloads the tier array is all we need
         items = payloads if payloads is not None else res.records
         self.telemetry.n_submitted += len(items)
         if res.recalibrated:
             self.telemetry.n_recalibrations += 1
-        for tier, item in zip(res.tiers.tolist(), items):
+        for tier, item in zip(exec_tiers.tolist(), items):
             self.telemetry.tier_counts[tier] += 1
             for full in self.queues[tier].push(item):
                 self._run(tier, full)
@@ -151,5 +196,26 @@ class ServingPipeline:
                 drained += len(tail)
         return drained
 
+    def pending(self) -> int:
+        """Requests sitting in partial micro-batches (not yet executed)."""
+        return sum(len(q) for q in self.queues.values())
+
+    def load_telemetry(self, state: dict) -> None:
+        """Restore telemetry counters (see the PipelineTelemetry
+        contract). Queue contents do not round-trip through telemetry
+        state, so restoring over pending payloads would desync
+        ``n_submitted`` from what later flushes execute — refuse it."""
+        depths = {t: len(q) for t, q in self.queues.items() if len(q)}
+        if depths:
+            raise RuntimeError(
+                f"cannot restore telemetry over pending micro-batch "
+                f"payloads (queue depths {depths}); flush() first")
+        self.telemetry.load_state_dict(state)
+        # executed-batch history must match the restored counters
+        self.executed.clear()
+
     def stats(self) -> dict:
-        return self.telemetry.snapshot(self.queues)
+        out = self.telemetry.snapshot(self.queues)
+        if self.admission is not None:
+            out["admission"] = self.admission.telemetry()
+        return out

@@ -169,17 +169,24 @@ class SkewRouteDispatcher:
                                               **knobs)
         return self.calibrator
 
+    def apply_config(self, new_router: RouterConfig) -> None:
+        """THE threshold hot-swap path — offline recalibration, the
+        streaming drift calibrator, and the admission controller all
+        land here: swap the frozen config, keep the calibrator's view
+        coherent, count it."""
+        with self._lock:
+            self.router = new_router
+            self.stats.n_recalibrations += 1
+            if self.calibrator is not None:
+                self.calibrator.config = new_router
+
     def recalibrate(self, calibration_scores: np.ndarray,
                     tier_shares: Sequence[float]) -> RouterConfig:
         """Hot-swap thresholds to hit new traffic shares (training-free)."""
         new_router = calibrate_multi_tier(
             jnp.asarray(calibration_scores), tier_shares,
             metric=self.router.metric, cumulative_p=self.router.cumulative_p)
-        with self._lock:
-            self.router = new_router
-            self.stats.n_recalibrations += 1
-            if self.calibrator is not None:
-                self.calibrator.config = new_router
+        self.apply_config(new_router)
         return new_router
 
     # -- dispatch -------------------------------------------------------------

@@ -28,6 +28,15 @@ from typing import Callable, Optional
 
 import numpy as np
 
+# Completions below this: latency quantiles report nan instead of a
+# degenerate value (p99 over <20 samples is just the max with extra steps).
+P99_MIN_SAMPLES = 20
+# Latency quantiles look at the most recent completions only: a feedback
+# controller needs the CURRENT tail, and a lifetime quantile never
+# recovers after one burst poisons it (measured: spill stayed engaged
+# forever in examples/serve_under_load.py).
+P99_WINDOW = 256
+
 
 @dataclasses.dataclass
 class Request:
@@ -69,6 +78,7 @@ class TierScheduler:
         self.pending: list[tuple[float, int, Request]] = []  # (deadline, id, req)
         self.inflight: dict[int, Request] = {}
         self.done: list[Request] = []
+        self.now = 0.0  # last clock seen by step(); anchors horizons
 
     def submit(self, req: Request) -> None:
         heapq.heappush(self.pending, (req.deadline, req.request_id, req))
@@ -89,6 +99,7 @@ class TierScheduler:
 
     def step(self, now: float) -> list[Request]:
         """Advance the scheduler clock; returns requests completed by now."""
+        self.now = max(self.now, now)
         # 1. finish in-flight work
         completed = []
         for rid, req in list(self.inflight.items()):
@@ -136,10 +147,41 @@ class TierScheduler:
         rep = self.replicas[replica_id]
         rep.healthy, rep.speed = True, speed
 
-    def p99_latency(self) -> float:
-        lats = [r.finished_at - r.submitted_at for r in self.done
-                if r.finished_at is not None]
-        return float(np.percentile(lats, 99)) if lats else float("nan")
+    # -- load probes (what the admission controller consumes) -----------------
+
+    def queue_depth(self) -> int:
+        """Requests waiting for a replica slot (excludes in-flight work)."""
+        return len(self.pending)
+
+    def latency_quantile(self, q: float,
+                         min_samples: int = P99_MIN_SAMPLES,
+                         window: int = P99_WINDOW,
+                         horizon: Optional[float] = None) -> float:
+        """Latency quantile over the last ``window`` completions (those
+        that finished within ``horizon`` seconds of the current clock,
+        when given), or ``nan`` below ``min_samples`` of them — a tail
+        quantile over a handful of requests is one request's latency
+        wearing a costume, and feeding it to a feedback controller makes
+        the controller chase noise. ``horizon`` matters for the same
+        reason in the other direction: a low-throughput tier keeps
+        burst-era completions in a count window long after the burst, so
+        a controller watching it never sees recovery. ``nan`` also means
+        "tier (near-)idle over the horizon", which callers should read
+        as the absence of latency pressure, not as pressure."""
+        recent = self.done[-max(window, 1):]
+        lats = [r.finished_at - r.submitted_at for r in recent
+                if r.finished_at is not None
+                and (horizon is None
+                     or r.finished_at >= self.now - horizon)]
+        if len(lats) < max(min_samples, 1):
+            return float("nan")
+        return float(np.percentile(lats, q))
+
+    def p99_latency(self, min_samples: int = P99_MIN_SAMPLES,
+                    window: int = P99_WINDOW,
+                    horizon: Optional[float] = None) -> float:
+        return self.latency_quantile(99, min_samples=min_samples,
+                                     window=window, horizon=horizon)
 
 
 def bucket_size(n: int, buckets: tuple[int, ...]) -> int:

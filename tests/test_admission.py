@@ -1,0 +1,328 @@
+"""Admission-controller tests: spec validation, the budget tighten/relax
+loop, hysteresis tier-spill, nan-safe load probes, serializable state,
+and the session-level integration (snapshot/restore, spec plumbing)."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cost import CostModel
+from repro.core.router import RouterConfig
+from repro.core.streaming_calibrate import StreamingCalibrator
+from repro.serving.admission import AdmissionController, AdmissionSpec
+
+TIER_MODELS = ("qwen7b", "qwen72b")
+
+
+def mk_controller(spec, window_vals=None, shares=(0.7, 0.3)):
+    cal = StreamingCalibrator(
+        RouterConfig(metric="entropy", thresholds=(0.7,)), list(shares),
+        window=256, min_samples=32, tolerance=0.05, cooldown=64)
+    if window_vals is not None:
+        cal.window.push(np.asarray(window_vals, np.float32))
+    return AdmissionController(cal, CostModel(), TIER_MODELS, spec), cal
+
+
+def uniform_window(n=256):
+    """A [0, 1] difficulty grid: window quantiles are exact by design."""
+    return np.linspace(0.0, 1.0, n)
+
+
+# -- AdmissionSpec ------------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="cost_budget_per_query"):
+        AdmissionSpec(cost_budget_per_query=0.0)
+    with pytest.raises(ValueError, match="hysteresis"):
+        AdmissionSpec(spill_on=0.5, spill_off=0.5)
+    with pytest.raises(ValueError, match="hysteresis"):
+        AdmissionSpec(spill_on=0.5, spill_off=0.8)
+    with pytest.raises(ValueError, match="spill_margin"):
+        AdmissionSpec(spill_margin=1.0)
+    with pytest.raises(ValueError, match="p99_slo"):
+        AdmissionSpec(p99_slo=-1.0)
+    with pytest.raises(ValueError, match="control_interval"):
+        AdmissionSpec(control_interval=0)
+    with pytest.raises(ValueError, match="pressure_beta"):
+        AdmissionSpec(pressure_beta=0.0)
+
+
+def test_spec_json_round_trip_and_unknown_fields():
+    spec = AdmissionSpec(cost_budget_per_query=3e-4, p99_slo=1.0,
+                         queue_depth_slo=24, spill_off=0.5)
+    assert AdmissionSpec.from_dict(json.loads(json.dumps(spec.to_dict()))) \
+        == spec
+    with pytest.raises(ValueError, match="unknown AdmissionSpec fields"):
+        AdmissionSpec.from_dict({"burst_budget": 1.0})
+
+
+# -- controller construction --------------------------------------------------
+
+def test_controller_requires_calibrator_and_matching_models():
+    with pytest.raises(ValueError, match="calibrator"):
+        AdmissionController(None, CostModel(), TIER_MODELS, AdmissionSpec())
+    cal = StreamingCalibrator(RouterConfig(metric="entropy",
+                                           thresholds=(0.7,)),
+                              [0.7, 0.3], window=64, min_samples=16)
+    with pytest.raises(ValueError, match="tier models"):
+        AdmissionController(cal, CostModel(),
+                            ("qwen7b", "qwen14b", "qwen72b"),
+                            AdmissionSpec())
+
+
+def test_controller_budget_requires_priced_tiers():
+    cal = StreamingCalibrator(RouterConfig(metric="entropy",
+                                           thresholds=(0.7,)),
+                              [0.7, 0.3], window=64, min_samples=16)
+    with pytest.raises(ValueError, match="no cost_per_mtok"):
+        AdmissionController(cal, CostModel(), ("mystery7b", "qwen72b"),
+                            AdmissionSpec(cost_budget_per_query=1e-4))
+    # without a budget the same unpriced tier is fine ($0 stand-in)
+    AdmissionController(cal, CostModel(), ("mystery7b", "qwen72b"),
+                        AdmissionSpec())
+
+
+# -- spill loop ---------------------------------------------------------------
+
+def spill_spec(**kw):
+    """Spill-only knobs: min_top_share pinned at the 0.3 baseline so the
+    quantile loop cannot move shares under the test."""
+    kw.setdefault("queue_depth_slo", 10)
+    kw.setdefault("spill_on", 1.0)
+    kw.setdefault("spill_off", 0.5)
+    kw.setdefault("spill_margin", 0.10)
+    kw.setdefault("pressure_beta", 1.0)   # pressure == raw, deterministic
+    kw.setdefault("min_top_share", 0.3)
+    return AdmissionSpec(**kw)
+
+
+def test_spill_engages_and_demotes_only_the_marginal_band():
+    ctrl, _ = mk_controller(spill_spec(), uniform_window())
+    ctrl.observe_tier_load(1, queue_depth=20)   # raw pressure 2.0
+    assert ctrl.control_step() is None          # shares pinned: spill only
+    assert ctrl.spill_active
+    # cut = 1 - 0.3 = 0.7; band = quantile(0.8) of the uniform grid
+    assert ctrl.marginal_cutoff() == pytest.approx(0.8, abs=0.01)
+    tiers = np.array([0, 1, 1, 1])
+    diff = np.array([0.10, 0.75, 0.95, 0.79])
+    out, spilled = ctrl.apply(tiers, diff)
+    # marginal top-tier calls (0.75, 0.79) demote one tier; the genuinely
+    # hard 0.95 keeps the big model; the cheap-tier call is untouched
+    assert out.tolist() == [0, 0, 1, 0] and spilled == 2
+    assert tiers.tolist() == [0, 1, 1, 1]   # caller's array not mutated
+    assert ctrl.n_spilled == 2
+
+
+def test_spill_hysteresis_is_sticky_between_watermarks():
+    ctrl, _ = mk_controller(spill_spec(), uniform_window())
+    ctrl.observe_tier_load(1, queue_depth=20)
+    ctrl.control_step()
+    assert ctrl.spill_active
+    ctrl.observe_tier_load(1, queue_depth=7)    # 0.7: between watermarks
+    ctrl.control_step()
+    assert ctrl.spill_active                    # still ON
+    ctrl.observe_tier_load(1, queue_depth=2)    # 0.2 <= spill_off
+    ctrl.control_step()
+    assert not ctrl.spill_active
+    ctrl.observe_tier_load(1, queue_depth=7)    # between watermarks again
+    ctrl.control_step()
+    assert not ctrl.spill_active                # ...and stays OFF
+    kinds = [e["kind"] for e in ctrl.events]
+    assert kinds == ["spill_on", "spill_off"]
+
+
+def test_no_spill_when_budgets_and_load_are_slack():
+    ctrl, _ = mk_controller(spill_spec(cost_budget_per_query=1.0),
+                            uniform_window())
+    ctrl.observe_tier_load(1, queue_depth=0)
+    for _ in range(5):
+        assert ctrl.control_step() is None
+    tiers = np.array([1, 1, 0, 1])
+    out, spilled = ctrl.apply(tiers, np.array([0.71, 0.75, 0.1, 0.99]))
+    assert spilled == 0 and out is tiers        # untouched, not even copied
+    assert not ctrl.spill_active and ctrl.n_spilled == 0
+
+
+def test_nan_p99_is_no_signal_not_pressure():
+    ctrl, _ = mk_controller(spill_spec(p99_slo=1.0), uniform_window())
+    ctrl.observe_tier_load(1, queue_depth=0, p99_latency=float("nan"))
+    ctrl.control_step()
+    assert ctrl.pressure == 0.0 and not ctrl.spill_active
+    # a real p99 breach IS pressure
+    ctrl.observe_tier_load(1, queue_depth=0, p99_latency=3.0)
+    ctrl.control_step()
+    assert ctrl.pressure == pytest.approx(3.0)
+    assert ctrl.spill_active
+
+
+# -- budget loop --------------------------------------------------------------
+
+def budget_spec(budget=2e-4, **kw):
+    kw.setdefault("cost_budget_per_query", budget)
+    kw.setdefault("control_interval", 1)
+    kw.setdefault("pressure_beta", 1.0)
+    kw.setdefault("tighten_step", 0.05)
+    kw.setdefault("relax_step", 0.05)
+    return AdmissionSpec(**kw)
+
+
+def test_over_budget_tightens_and_slack_relaxes_to_baseline():
+    ctrl, cal = mk_controller(budget_spec(), uniform_window())
+    theta0 = cal.config.thresholds[0]
+    # an all-expensive batch drives the $/query EWMA far over budget
+    ctrl.apply(np.ones(64, np.int64), np.full(64, 0.9))
+    cfg = ctrl.control_step()
+    assert ctrl.n_tighten == 1 and ctrl.shares[1] == pytest.approx(0.25)
+    assert cal.target_shares == ctrl.shares     # drift loop now aims here
+    assert cfg is not None and cfg.thresholds[0] > theta0  # stricter cut
+    # cheap traffic brings the EWMA under budget -> relax, capped at the
+    # spec baseline
+    ctrl.apply(np.zeros(64, np.int64), np.full(64, 0.1))
+    cfg = ctrl.control_step()
+    assert ctrl.n_relax == 1 and ctrl.shares[1] == pytest.approx(0.30)
+    assert cfg.thresholds[0] == pytest.approx(theta0, abs=0.02)
+    # already at baseline: nothing further to relax
+    ctrl.apply(np.zeros(64, np.int64), np.full(64, 0.1))
+    assert ctrl.control_step() is None and ctrl.n_relax == 1
+
+
+def test_tighten_respects_min_top_share_floor():
+    ctrl, _ = mk_controller(budget_spec(min_top_share=0.10),
+                            uniform_window())
+    for _ in range(20):
+        ctrl.apply(np.ones(64, np.int64), np.full(64, 0.9))
+        ctrl.control_step()
+    assert ctrl.shares[1] == pytest.approx(0.10)
+    assert math.isclose(sum(ctrl.shares), 1.0)
+
+
+def test_control_actions_wait_for_a_populated_window():
+    ctrl, _ = mk_controller(budget_spec())     # empty calibrator window
+    ctrl.apply(np.ones(64, np.int64), np.full(64, 0.9))
+    assert ctrl.control_step() is None
+    assert ctrl.n_tighten == 0 and ctrl.shares == (0.7, 0.3)
+    assert math.isnan(ctrl.marginal_cutoff())
+
+
+def test_control_interval_rate_limits_quantile_actions():
+    ctrl, _ = mk_controller(budget_spec(control_interval=128),
+                            uniform_window())
+    for _ in range(4):                         # 256 requests, all expensive
+        ctrl.apply(np.ones(64, np.int64), np.full(64, 0.9))
+        ctrl.control_step()
+    assert ctrl.n_tighten <= 256 // 128 + 1
+
+
+# -- serializable state -------------------------------------------------------
+
+def test_state_dict_json_round_trips_bit_exactly():
+    ctrl, _ = mk_controller(spill_spec(cost_budget_per_query=2e-4),
+                            uniform_window())
+    ctrl.observe_tier_load(0, 3, p99_latency=0.4)
+    ctrl.observe_tier_load(1, 20, p99_latency=float("nan"))
+    ctrl.control_step()
+    ctrl.apply(np.array([1, 1, 0, 1]), np.array([0.75, 0.95, 0.1, 0.79]))
+    state = json.loads(json.dumps(ctrl.state_dict()))
+    ctrl2, cal2 = mk_controller(spill_spec(cost_budget_per_query=2e-4),
+                                uniform_window())
+    ctrl2.load_state_dict(state)
+    assert ctrl2.state_dict() == ctrl.state_dict()
+    assert ctrl2.spill_active and ctrl2.n_spilled == ctrl.n_spilled
+    assert cal2.target_shares == ctrl.shares
+
+
+def test_load_state_dict_rejects_tier_mismatch():
+    ctrl, _ = mk_controller(spill_spec(), uniform_window())
+    state = ctrl.state_dict()
+    state["shares"] = [0.5, 0.3, 0.2]
+    with pytest.raises(ValueError, match="tier"):
+        ctrl.load_state_dict(state)
+
+
+# -- session / spec integration ----------------------------------------------
+
+def desc_scores(rng, b, k=50, alpha_lo=0.2, alpha_hi=2.5):
+    alphas = rng.uniform(alpha_lo, alpha_hi, b)
+    base = 1.0 / np.arange(1, k + 1)[None, :] ** alphas[:, None]
+    noise = rng.uniform(0.95, 1.05, (b, k))
+    return np.sort((base * noise).astype(np.float32), axis=1)[:, ::-1].copy()
+
+
+def mk_route_spec(admission=None):
+    from repro.api import CalibrationSpec, RouteSpec
+    return RouteSpec(
+        metric="entropy", thresholds=(6.0,), top_k=50,
+        tier_names=TIER_MODELS,
+        calibration=CalibrationSpec(policy="streaming",
+                                    target_shares=(0.7, 0.3), window=256,
+                                    min_samples=32, tolerance=0.08,
+                                    cooldown=64),
+        admission=admission)
+
+
+def test_route_spec_admission_field_round_trips_and_validates():
+    from repro.api import CalibrationSpec, RouteSpec
+    adm = AdmissionSpec(cost_budget_per_query=3e-4, p99_slo=1.0)
+    spec = mk_route_spec(adm)
+    again = RouteSpec.from_dict(json.loads(spec.to_json()))
+    assert again == spec and again.admission == adm
+    assert RouteSpec.from_dict(json.loads(mk_route_spec().to_json())) \
+        .admission is None
+    with pytest.raises(ValueError, match="streaming"):
+        RouteSpec(metric="entropy", thresholds=(6.0,), top_k=50,
+                  tier_names=TIER_MODELS,
+                  calibration=CalibrationSpec(policy="static"),
+                  admission=adm)
+
+
+def test_session_admission_requires_runners_and_probe_requires_admission():
+    from repro.api import build
+    with pytest.raises(ValueError, match="runners"):
+        build(mk_route_spec(AdmissionSpec()))
+    plain = build(mk_route_spec(), runners={0: list, 1: list})
+    with pytest.raises(RuntimeError, match="no admission controller"):
+        plain.observe_tier_load(1, 5)
+
+
+def test_session_snapshot_restore_round_trips_admission_state():
+    from repro.api import SkewRouteSession, build
+    adm = AdmissionSpec(cost_budget_per_query=2e-4, p99_slo=1.0,
+                        queue_depth_slo=8, spill_off=0.5,
+                        control_interval=32, pressure_beta=1.0)
+    spec = mk_route_spec(adm)
+    rng = np.random.default_rng(0)
+    runners = {0: list, 1: list}
+    session = build(spec, runners=runners)
+    for _ in range(4):                  # populate the calibrator window
+        session.submit(desc_scores(rng, 64))
+    session.observe_tier_load(1, queue_depth=40)   # saturate -> spill
+    session.submit(desc_scores(rng, 64))
+    session.flush()
+    assert session.admission.spill_active
+    assert session.telemetry()["admission"]["n_seen"] == 320
+
+    snap = json.loads(json.dumps(session.snapshot()))
+    replica = SkewRouteSession.from_snapshot(snap, runners={0: list, 1: list})
+    assert replica.admission.state_dict() == session.admission.state_dict()
+    assert replica.admission.spill_active
+    assert replica.thresholds == session.thresholds
+    assert replica.calibrator.target_shares == session.admission.shares
+    assert replica.pipeline.telemetry.state_dict() \
+        == session.pipeline.telemetry.state_dict()
+    # and the replica keeps routing from that exact state
+    replica.submit(desc_scores(np.random.default_rng(1), 32))
+    replica.flush()
+    assert replica.admission.n_seen == session.admission.n_seen + 32
+
+
+def test_pipeline_admission_requires_attached_calibrator():
+    from repro.serving.pipeline import ServingPipeline
+    from repro.serving.router_service import SkewRouteDispatcher
+    d = SkewRouteDispatcher(RouterConfig(metric="entropy",
+                                         thresholds=(6.0,)),
+                            list(TIER_MODELS))  # no calibrator attached
+    ctrl, _ = mk_controller(AdmissionSpec())
+    with pytest.raises(ValueError, match="calibrator"):
+        ServingPipeline(d, {0: list, 1: list}, admission=ctrl)

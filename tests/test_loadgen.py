@@ -1,0 +1,202 @@
+"""Workload-trace tests: spec validation + JSON round-trip, seeded
+determinism, rate/drift/failure schedules, and end-to-end trace replay
+through the canonical serving setup (exactly-once execution, baseline
+bit-for-bit vs dispatcher decisions, spill under saturation)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.loadgen import (CANONICAL_TRACES, BurstSpec, DriftSpec,
+                                   FailureSpec, LoadRunner, TraceSpec,
+                                   canonical_load_runner, canonical_trace,
+                                   generate, make_pool_runners, make_pools)
+
+
+# -- TraceSpec ----------------------------------------------------------------
+
+def test_canonical_traces_json_round_trip():
+    for name, spec in CANONICAL_TRACES.items():
+        assert name == spec.name
+        again = TraceSpec.from_json(spec.to_json())
+        assert again == spec
+    with pytest.raises(KeyError, match="unknown canonical trace"):
+        canonical_trace("nope")
+
+
+def test_trace_spec_validation():
+    with pytest.raises(ValueError, match="steps"):
+        TraceSpec(name="t", steps=0)
+    with pytest.raises(ValueError, match="dt"):
+        TraceSpec(name="t", steps=10, dt=0.0)
+    with pytest.raises(ValueError, match="drift segment"):
+        TraceSpec(name="t", steps=10, drift=())
+    with pytest.raises(ValueError, match="begin at step 0"):
+        TraceSpec(name="t", steps=10, drift=(DriftSpec(5, 0.5, 1.0),))
+    with pytest.raises(ValueError, match="sorted"):
+        TraceSpec(name="t", steps=10, drift=(DriftSpec(0, 0.5, 1.0),
+                                             DriftSpec(8, 0.5, 1.0),
+                                             DriftSpec(4, 0.5, 1.0)))
+    with pytest.raises(ValueError, match="diurnal"):
+        TraceSpec(name="t", steps=10, diurnal_amplitude=0.5)
+    with pytest.raises(ValueError, match="multiplier"):
+        BurstSpec(start=0, length=5, multiplier=0.0)
+    with pytest.raises(ValueError, match="alpha"):
+        DriftSpec(0, 0.0, 1.0)
+    with pytest.raises(ValueError, match="down_at"):
+        FailureSpec(tier=1, replica=0, down_at=7, up_at=7)
+    with pytest.raises(ValueError, match="unknown TraceSpec fields"):
+        TraceSpec.from_dict({"name": "t", "steps": 10, "surge": 2})
+
+
+def test_rate_schedule_burst_and_diurnal():
+    spec = TraceSpec(name="t", steps=100, base_rate=5.0,
+                     bursts=(BurstSpec(start=20, length=10, multiplier=4.0),))
+    assert spec.rate(19) == pytest.approx(5.0)
+    assert spec.rate(20) == pytest.approx(20.0)
+    assert spec.rate(29) == pytest.approx(20.0)
+    assert spec.rate(30) == pytest.approx(5.0)
+    tide = TraceSpec(name="t", steps=100, base_rate=5.0,
+                     diurnal_amplitude=0.5, diurnal_period=100.0)
+    assert tide.rate(25) == pytest.approx(7.5)   # sin peak
+    assert tide.rate(75) == pytest.approx(2.5)   # sin trough
+    assert tide.rate(0) == pytest.approx(5.0)
+
+
+def test_drift_segment_lookup():
+    spec = TraceSpec(name="t", steps=100,
+                     drift=(DriftSpec(0, 1.0, 2.0), DriftSpec(40, 0.1, 0.5)))
+    assert spec.drift_segment(0).alpha_lo == 1.0
+    assert spec.drift_segment(39).alpha_lo == 1.0
+    assert spec.drift_segment(40).alpha_lo == 0.1
+    assert spec.drift_segment(99).alpha_lo == 0.1
+
+
+# -- generate -----------------------------------------------------------------
+
+def test_generate_is_deterministic_for_a_spec():
+    spec = canonical_trace("smoke")
+    a, b = list(generate(spec)), list(generate(spec))
+    assert [s.n_arrivals for s in a] == [s.n_arrivals for s in b]
+    for sa, sb in zip(a, b):
+        np.testing.assert_array_equal(sa.scores, sb.scores)
+        assert sa.events == sb.events and sa.time == sb.time
+    # a different seed is a different trace
+    other = list(generate(TraceSpec.from_dict(
+        {**spec.to_dict(), "seed": spec.seed + 1})))
+    assert [s.n_arrivals for s in a] != [s.n_arrivals for s in other]
+
+
+def test_generate_scores_shape_and_order():
+    spec = TraceSpec(name="t", steps=30, seed=1, base_rate=6.0, top_k=40,
+                     max_batch=10)
+    total = 0
+    for step in generate(spec):
+        assert step.scores.dtype == np.float32
+        assert step.scores.shape[1] == 40 and step.n_arrivals <= 10
+        assert np.all(np.diff(step.scores, axis=1) <= 0)  # descending rows
+        total += step.n_arrivals
+    assert total > 0
+
+
+def test_drift_makes_score_rows_flatter():
+    spec = TraceSpec(name="t", steps=100, seed=2, base_rate=20.0,
+                     drift=(DriftSpec(0, 1.5, 2.5),     # spiky = easy
+                            DriftSpec(50, 0.1, 0.4)))   # flat  = hard
+    flat = {False: [], True: []}
+    for step in generate(spec):
+        if step.n_arrivals:
+            flat[step.step >= 50].append(
+                float((step.scores[:, -1] / step.scores[:, 0]).mean()))
+    assert np.mean(flat[True]) > 5 * np.mean(flat[False])
+
+
+def test_failure_events_fire_at_their_steps():
+    spec = TraceSpec(name="t", steps=12, seed=3,
+                     failures=(FailureSpec(tier=1, replica=0, down_at=3,
+                                           up_at=7, speed=0.5),))
+    by_step = {s.step: s.events for s in generate(spec) if s.events}
+    assert sorted(by_step) == [3, 7]
+    (down,), (up,) = by_step[3], by_step[7]
+    assert (down.kind, down.tier, down.replica) == ("down", 1, 0)
+    assert (up.kind, up.speed) == ("up", 0.5)
+
+
+# -- trace replay through the serving stack -----------------------------------
+
+REPLAY_TRACE = TraceSpec(
+    name="replay", seed=5, steps=60, dt=0.05, top_k=50, base_rate=4.0,
+    bursts=(BurstSpec(start=20, length=15, multiplier=3.0),),
+    drift=(DriftSpec(0, 1.0, 2.5), DriftSpec(25, 0.2, 0.9)),
+    failures=(FailureSpec(tier=1, replica=0, down_at=22, up_at=40,
+                          speed=0.5),))
+
+
+def test_baseline_replay_executes_exactly_once_bit_for_bit():
+    runner = canonical_load_runner(with_admission=False, trace=REPLAY_TRACE)
+    report = runner.run(REPLAY_TRACE)
+    s = report.summary
+    assert s["n_arrivals"] == s["n_completed"] > 0
+    pipe = runner.session.pipeline.telemetry
+    assert pipe.n_submitted == pipe.n_executed == s["n_arrivals"]
+    # admission off: the executed mix IS the dispatcher's decisions
+    assert s["n_spilled"] == 0
+    decisions = {str(t): int(c)
+                 for t, c in runner.session.stats.tier_counts.items()}
+    assert decisions == s["tier_counts_executed"]
+    assert "admission" not in s
+    # the replica failure was actually driven into the pool
+    kinds = [(f["kind"], f["tier"], f["replica"]) for f in s["failures"]]
+    assert kinds == [("down", 1, 0), ("up", 1, 0)]
+    # one telemetry row per step, serializable trajectory
+    assert len(report.steps) == REPLAY_TRACE.steps
+    assert "spill_active" not in report.steps[0]
+
+
+def test_admission_replay_spills_under_saturation():
+    trace = canonical_trace("smoke")
+    runner = canonical_load_runner(with_admission=True, trace=trace)
+    report = runner.run(trace)
+    s = report.summary
+    assert s["n_arrivals"] == s["n_completed"]
+    # the smoke trace saturates the expensive tier: spill must engage...
+    assert s["n_spilled"] > 0
+    assert any(row["spill_active"] for row in report.steps)
+    events = runner.session.admission.events
+    assert any(e["kind"] == "spill_on" for e in events)
+    # ...and the executed mix now sits BELOW the dispatcher's decisions
+    assert s["expensive_share_executed"] < s["expensive_share_decision"]
+    assert s["admission"]["n_seen"] == s["n_arrivals"]
+
+
+def test_load_runner_validation():
+    trace = REPLAY_TRACE
+    runner = canonical_load_runner(False, trace)
+    session = runner.session
+    with pytest.raises(ValueError, match="routes tiers"):
+        LoadRunner(session, {0: runner.pools[0]})
+    with pytest.raises(ValueError, match="slo_latency"):
+        LoadRunner(session, runner.pools, slo_latency=0.0)
+    with pytest.raises(ValueError, match="record_every"):
+        LoadRunner(session, runner.pools, record_every=0)
+    with pytest.raises(ValueError, match="tier_quality"):
+        LoadRunner(session, runner.pools, tier_quality=(1.0,))
+    from repro.api import build
+    no_pipeline = build(session.spec)
+    with pytest.raises(ValueError, match="no pipeline"):
+        LoadRunner(no_pipeline, runner.pools)
+
+
+def test_make_pools_and_runners_wire_tiers():
+    pools = make_pools({0: [1.0, 2.0], 1: [0.5]}, batch_slots={0: 4},
+                       base_token_time=1e-4)
+    assert sorted(pools) == [0, 1]
+    assert pools[0].batch_slots == 4 and pools[1].batch_slots == 8
+    assert pools[0].replicas[1].speed == 2.0
+    runners = make_pool_runners(pools)
+    from repro.serving.loadgen import SimRequest
+    reqs = runners[1]([SimRequest(request_id=9, submitted_at=0.0,
+                                  deadline=5.0)])
+    assert len(reqs) == 1 and reqs[0].tier == 1
+    assert pools[1].queue_depth() == 1

@@ -1,13 +1,17 @@
 """Pipelined serving-flow tests: dispatch -> per-tier micro-batch queues
 -> tier runners, with telemetry and inline recalibration."""
 
+import math
+from collections import Counter
+
 import numpy as np
 import pytest
 
 from repro.core.router import RouterConfig
 from repro.serving.pipeline import ServingPipeline
 from repro.serving.router_service import SkewRouteDispatcher
-from repro.serving.scheduler import MicroBatchQueue
+from repro.serving.scheduler import (MicroBatchQueue, Replica, Request,
+                                     TierScheduler)
 
 
 def desc_scores(rng, b, k=100):
@@ -119,6 +123,84 @@ def test_pipeline_counts_recalibrations():
     pipe.flush()
     assert d.stats.n_recalibrations >= 1
     assert pipe.telemetry.n_recalibrations == d.stats.n_recalibrations
+
+
+def test_telemetry_restore_then_flush_executes_pending_exactly_once():
+    """The PipelineTelemetry serialization contract: counters only, no
+    queue payloads — so a restore over pending items is refused, and the
+    sanctioned order (flush, then restore) leaves every pending item
+    executed exactly once, never doubled nor dropped."""
+    rng = np.random.default_rng(6)
+    pipe, d, ran, scores = _mk_pipeline(rng, micro_batch=4)
+
+    pipe.submit(scores[:10], payloads=[f"a{i}" for i in range(10)])
+    assert pipe.pending() == 10 - pipe.telemetry.n_executed > 0
+    # restoring over pending payloads would desync n_submitted from what
+    # later flushes execute -> refused
+    with pytest.raises(RuntimeError, match="pending"):
+        pipe.load_telemetry(pipe.telemetry.state_dict())
+    pipe.flush()
+    assert pipe.telemetry.n_submitted == pipe.telemetry.n_executed == 10
+
+    saved = pipe.telemetry.state_dict()
+    # traffic past the save point, then rewind the counters to it
+    pipe.submit(scores[10:20], payloads=[f"b{i}" for i in range(10)])
+    pipe.flush()
+    pipe.load_telemetry(saved)
+    assert pipe.telemetry.state_dict() == saved
+    assert pipe.executed == []       # batch history matches the counters
+
+    # replaying the post-save traffic: counters land where the first
+    # pass did, and no item was double- or zero-executed along the way
+    pipe.submit(scores[10:20], payloads=[f"b{i}" for i in range(10)])
+    pipe.flush()
+    assert pipe.telemetry.n_submitted == pipe.telemetry.n_executed == 20
+    counts = Counter(p for bs in ran.values() for b in bs for p in b)
+    assert all(counts[f"a{i}"] == 1 for i in range(10))
+    assert all(counts[f"b{i}"] == 2 for i in range(10))  # both passes ran
+
+
+def test_telemetry_state_round_trips_and_reads_old_payloads():
+    rng = np.random.default_rng(7)
+    pipe, d, ran, scores = _mk_pipeline(rng)
+    pipe.submit(scores)
+    pipe.flush()
+    state = pipe.telemetry.state_dict()
+    pipe2, *_ = _mk_pipeline(np.random.default_rng(7))
+    pipe2.load_telemetry(state)
+    assert pipe2.telemetry.state_dict() == state
+    # pre-admission snapshots carry no n_spilled key; they never spilled
+    legacy = {k: v for k, v in state.items() if k != "n_spilled"}
+    pipe2.load_telemetry(legacy)
+    assert pipe2.telemetry.n_spilled == 0
+
+
+# -- TierScheduler load probes ------------------------------------------------
+
+def test_p99_latency_nan_below_min_samples_and_outside_horizon():
+    pool = TierScheduler(0, [Replica(0, 0, speed=100.0)], batch_slots=8,
+                         base_token_time=0.001)
+    assert math.isnan(pool.p99_latency())          # zero completions
+    for i in range(30):
+        pool.submit(Request(i, 0, prompt_len=10, max_new=10,
+                            deadline=99.0, submitted_at=0.0))
+    t = 0.0
+    while pool.pending or pool.inflight:
+        t += 0.05
+        pool.step(t)
+    assert len(pool.done) == 30
+    assert math.isfinite(pool.p99_latency())
+    assert pool.queue_depth() == 0
+    # still nan when the caller demands more samples than exist...
+    assert math.isnan(pool.p99_latency(min_samples=31))
+    assert math.isfinite(pool.p99_latency(min_samples=1))
+    # ...or when nothing completed within the recency horizon: an idle
+    # tier must read as NO latency pressure, not stale burst pressure
+    pool.step(t + 1000.0)
+    assert math.isnan(pool.p99_latency(horizon=10.0))
+    assert math.isfinite(pool.p99_latency(horizon=1e6))
+    # count-window path: a tiny window below the sample floor is nan too
+    assert math.isnan(pool.latency_quantile(99, min_samples=20, window=5))
 
 
 def test_pipeline_with_engine_bank():

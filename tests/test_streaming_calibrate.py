@@ -145,6 +145,35 @@ def test_cooldown_bounds_flapping():
     assert cal.n_swaps <= 4  # ~1 per cooldown period, not per batch
 
 
+def test_loadgen_drift_trace_converges_shares():
+    """Same drift property driven by a seeded workload trace instead of
+    hand-built eras: the loadgen score stream walks the mix off target
+    mid-trace and the calibrator swaps back onto it — the trace spec IS
+    the regression input (replayable from JSON anywhere)."""
+    from repro.serving.loadgen import DriftSpec, TraceSpec, generate
+    spec = TraceSpec(
+        name="drift-regression", seed=3, steps=160, base_rate=24.0,
+        top_k=100,
+        drift=(DriftSpec(0, 1.2, 2.5), DriftSpec(60, 0.1, 0.9)))
+    target = (0.7, 0.3)
+    cal = StreamingCalibrator(
+        RouterConfig(metric="entropy", thresholds=(0.0,)),
+        target, window=512, min_samples=128, tolerance=0.08, cooldown=256)
+    era2_shares = []
+    for step in generate(spec):
+        if step.n_arrivals == 0:
+            continue
+        diff = np.asarray(sk.difficulty(jnp.asarray(step.scores),
+                                        metric="entropy"))
+        cal.observe(diff)
+        if step.step >= 120:     # well after the drift landed
+            era2_shares.append(
+                float((diff > cal.config.thresholds[0]).mean()))
+    assert cal.n_swaps >= 2      # initial mis-calibration + the drift
+    assert any(e.max_drift > 0.08 for e in cal.events)
+    assert abs(np.mean(era2_shares) - target[1]) < 0.08
+
+
 # -- three-tier fit -----------------------------------------------------------
 
 def test_multi_tier_fit_matches_window_quantiles():
