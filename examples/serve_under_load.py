@@ -60,7 +60,7 @@ def main():
     # a replica restored from these bytes resumes mid-spill
     snap = session.snapshot()
     print(f"snapshot: {len(str(snap))} chars, admission state "
-          f"{sorted(snap['admission'])}")
+          f"{sorted(snap['state']['admission'])}")
 
 
 if __name__ == "__main__":

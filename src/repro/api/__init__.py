@@ -33,11 +33,13 @@ from repro.api.backends import (  # noqa: F401
     resolve_backend_name,
 )
 from repro.api.spec import (  # noqa: F401
+    ENVELOPE_VERSION,
     SCHEMA_VERSION,
     AdmissionSpec,
     CalibrationSpec,
     CostSpec,
     RouteSpec,
+    policy_fingerprint,
 )
 from repro.api.session import (  # noqa: F401
     EngineBankLike,

@@ -250,6 +250,15 @@ def make_backend(name: str = "auto", **kwargs) -> DifficultyBackend:
     return factory(**kwargs)
 
 
+def _make_sharded(**kwargs) -> DifficultyBackend:
+    """Lazy factory: the mesh-sharded dispatch backend (`api/sharded.py`)
+    — imported on first use so merely listing backends never touches
+    device state. Accepts ``crossover_batch=``/``mesh=``."""
+    from repro.api.sharded import ShardedBackend
+    return ShardedBackend(**kwargs)
+
+
 register_backend("oracle", OracleBackend)
 register_backend("pallas", PallasBackend)
 register_backend("fused", FusedBackend)
+register_backend("sharded", _make_sharded)

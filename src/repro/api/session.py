@@ -31,7 +31,8 @@ from typing import (Callable, Mapping, Optional, Protocol, Sequence, Union,
 import numpy as np
 
 from repro.api import backends as _backends
-from repro.api.spec import SCHEMA_VERSION, RouteSpec
+from repro.api.spec import (ENVELOPE_VERSION, SCHEMA_VERSION, RouteSpec,
+                            policy_fingerprint)
 from repro.serving import _deprecation
 from repro.serving.admission import AdmissionController
 from repro.serving.pipeline import PipelineTelemetry, ServingPipeline
@@ -60,7 +61,7 @@ class SkewRouteSession:
         # it per call (see repro.kernels.device.default_interpret), so a
         # snapshot taken on TPU restores cleanly on CPU and vice versa.
         backend_kwargs = ({"crossover_batch": spec.crossover_batch}
-                          if spec.backend == "auto" else {})
+                          if spec.backend in ("auto", "sharded") else {})
         self.backend = _backends.make_backend(spec.backend, **backend_kwargs)
         # One facade-level lock makes session verbs atomic w.r.t. each
         # other (the dispatcher's internal lock only covers its own
@@ -214,13 +215,15 @@ class SkewRouteSession:
     # -- serializable state ---------------------------------------------------
 
     def snapshot(self) -> dict:
-        """The session's complete mutable state as a JSON-serializable dict.
+        """The session as a schema-versioned ENVELOPE: a frozen ``policy``
+        half (the spec) and a mutable ``state`` half (live thresholds,
+        dispatcher telemetry, the streaming calibrator's exact window,
+        the admission controller's full state) — the contract is
+        documented at :data:`repro.api.spec.ENVELOPE_VERSION`.
 
-        Covers the live thresholds, dispatcher telemetry, the streaming
-        calibrator's exact window (ring buffer, cursor, swap history),
-        and the admission controller's full state (spill flag, pressure/
-        cost EWMAs, adjusted target shares, event log) —
-        :meth:`restore` rebuilds all of it bit-exactly.
+        :meth:`restore` rebuilds all of it bit-exactly; the replica-sync
+        fabric ships ONLY the ``state`` half (stamped with the policy
+        fingerprint) between replicas that already share the policy.
         Pending micro-batch payloads are arbitrary Python objects and are
         NOT serializable: ``flush()`` before snapshotting.
         """
@@ -236,9 +239,8 @@ class SkewRouteSession:
                         f"(queue depths {depths}); call flush() first")
             d = self.dispatcher
             with d._lock:
-                snap = {
-                    "schema_version": SCHEMA_VERSION,
-                    "spec": self.spec.to_dict(),
+                state = {
+                    "policy_fingerprint": policy_fingerprint(self.spec),
                     "thresholds": list(d.router.thresholds),
                     "next_id": d._next_id,
                     "stats": d.stats.state_dict(),
@@ -249,81 +251,141 @@ class SkewRouteSession:
                                   else self.admission.state_dict()),
                 }
             if self.pipeline is not None:
-                snap["pipeline"] = self.pipeline.telemetry.state_dict()
-            return snap
+                state["pipeline"] = self.pipeline.telemetry.state_dict()
+            return {
+                "envelope_version": ENVELOPE_VERSION,
+                "policy": self.spec.to_dict(),
+                "state": state,
+            }
 
-    def restore(self, snap: Mapping) -> "SkewRouteSession":
-        """Load a :meth:`snapshot` back into this session (in place).
+    _STATE_KEYS = ("thresholds", "next_id", "stats", "calibrator",
+                   "pipeline", "admission")
 
-        The snapshot must come from a session with an IDENTICAL spec —
-        restoring state across different policies is a category error the
-        spec equality check turns into a loud one.
-        """
+    def _state_of(self, snap: Mapping) -> Mapping:
+        """Validate an envelope (or legacy flat v1 snapshot) against this
+        session's policy and return its state half."""
+        if "envelope_version" in snap:
+            ver = snap["envelope_version"]
+            if ver != ENVELOPE_VERSION:
+                raise ValueError(
+                    f"unsupported snapshot envelope_version {ver!r}; this "
+                    f"build understands version {ENVELOPE_VERSION}")
+            if snap.get("policy") != self.spec.to_dict():
+                raise ValueError(
+                    "snapshot was taken under a different RouteSpec; build "
+                    "a session from RouteSpec.from_dict(snapshot['policy']) "
+                    "instead")
+            return snap["state"]
+        # -- legacy flat v1: {"schema_version": 1, "spec": ..., <state>} --
         if snap.get("schema_version") != SCHEMA_VERSION:
             raise ValueError(
                 f"unsupported snapshot schema_version "
                 f"{snap.get('schema_version')!r}; this build understands "
-                f"version {SCHEMA_VERSION}")
+                f"envelope version {ENVELOPE_VERSION} (and the legacy flat "
+                f"version {SCHEMA_VERSION})")
+        _deprecation.warn_once(
+            "snapshot-v1",
+            "flat v1 session snapshots are deprecated; re-snapshot to get "
+            "the versioned policy/state envelope (see "
+            "repro.api.spec.ENVELOPE_VERSION for the contract)")
         if snap["spec"] != self.spec.to_dict():
             raise ValueError("snapshot was taken under a different "
                              "RouteSpec; build a session from "
                              "RouteSpec.from_dict(snapshot['spec']) instead")
-        with self._lock:
-            return self._restore_locked(snap)
+        return {k: snap.get(k) for k in self._STATE_KEYS}
 
-    def _restore_locked(self, snap: Mapping) -> "SkewRouteSession":
+    def restore(self, snap: Mapping) -> "SkewRouteSession":
+        """Load a :meth:`snapshot` back into this session (in place).
+
+        Accepts the versioned envelope AND (behind a warn-once shim) the
+        legacy flat v1 layout. Either way the snapshot must come from a
+        session with an IDENTICAL spec — restoring state across different
+        policies is a category error the policy check turns into a loud
+        one.
+        """
+        state = self._state_of(snap)
+        with self._lock:
+            return self._restore_locked(state)
+
+    def restore_state(self, state: Mapping) -> "SkewRouteSession":
+        """Load ONLY the ``state`` half of an envelope — what the replica
+        fabric ships between sessions that already share the policy.
+
+        The state's ``policy_fingerprint`` must match this session's
+        spec: state minted under a different policy is refused loudly
+        (there is no "close enough" for thresholds fit against another
+        policy's calibration window).
+        """
+        fp = state.get("policy_fingerprint")
+        ours = policy_fingerprint(self.spec)
+        if fp != ours:
+            raise ValueError(
+                f"state policy_fingerprint {fp!r} does not match this "
+                f"session's policy ({ours!r}); state only transfers "
+                f"between sessions built from the SAME RouteSpec")
+        with self._lock:
+            return self._restore_locked(state)
+
+    def _restore_locked(self, state: Mapping) -> "SkewRouteSession":
         if self.pipeline is not None and self.pipeline.pending():
             depths = {t: len(q) for t, q in self.pipeline.queues.items()
                       if len(q)}
             raise RuntimeError(
                 f"cannot restore over pending micro-batch payloads "
                 f"(queue depths {depths}); call flush() first")
-        adm_snap = snap.get("admission")
-        if (adm_snap is None) != (self.admission is None):
-            raise ValueError("snapshot and session disagree on whether "
+        adm_state = state.get("admission")
+        if (adm_state is None) != (self.admission is None):
+            raise ValueError("stateshot and session disagree on whether "
                              "an admission controller is attached")
         d = self.dispatcher
         with d._lock:
             d.router = dataclasses.replace(
-                d.router, thresholds=tuple(snap["thresholds"]))
-            d._next_id = int(snap["next_id"])
-            d.stats.load_state_dict(snap["stats"])
-            cal_snap = snap.get("calibrator")
-            if (cal_snap is None) != (d.calibrator is None):
-                raise ValueError("snapshot and session disagree on whether "
+                d.router, thresholds=tuple(state["thresholds"]))
+            d._next_id = int(state["next_id"])
+            d.stats.load_state_dict(state["stats"])
+            cal_state = state.get("calibrator")
+            if (cal_state is None) != (d.calibrator is None):
+                raise ValueError("stateshot and session disagree on whether "
                                  "a streaming calibrator is attached")
-            if cal_snap is not None:
-                d.calibrator.load_state_dict(cal_snap)
+            if cal_state is not None:
+                d.calibrator.load_state_dict(cal_state)
                 d.router = d.calibrator.config
-        if adm_snap is not None:
-            self.admission.load_state_dict(adm_snap)
+        if adm_state is not None:
+            self.admission.load_state_dict(adm_state)
         # pipeline presence may legitimately differ (runners are runtime,
         # not policy) — but state must never silently cross the gap
-        pipe_snap = snap.get("pipeline")
-        if pipe_snap is not None and self.pipeline is None:
+        pipe_state = state.get("pipeline")
+        if pipe_state is not None and self.pipeline is None:
             warnings.warn(
-                "snapshot carries pipeline telemetry but this session "
+                "stateshot carries pipeline telemetry but this session "
                 "was built without runners; those counters are not "
                 "restored", stacklevel=3)
         elif self.pipeline is not None:
-            if pipe_snap is None:
+            if pipe_state is None:
                 warnings.warn(
-                    "snapshot has no pipeline telemetry; this session's "
+                    "stateshot has no pipeline telemetry; this session's "
                     "pipeline counters are reset to zero", stacklevel=3)
-                pipe_snap = PipelineTelemetry(
+                pipe_state = PipelineTelemetry(
                     tier_counts={t: 0 for t in self.pipeline.queues}
                 ).state_dict()
             # the contract lives in ServingPipeline.load_telemetry: queue
             # payloads don't round-trip, counters restore on drained
             # queues only (and executed history resets to match)
-            self.pipeline.load_telemetry(pipe_snap)
+            self.pipeline.load_telemetry(pipe_state)
         return self
 
     @classmethod
     def from_snapshot(cls, snap: Mapping,
                       runners: Optional[Runners] = None) -> "SkewRouteSession":
-        """Stand up a replica directly from another session's snapshot."""
-        session = cls(RouteSpec.from_dict(snap["spec"]), runners=runners)
+        """Stand up a replica directly from another session's snapshot
+        (envelope or legacy flat v1)."""
+        policy = snap.get("policy") if "envelope_version" in snap \
+            else snap.get("spec")
+        if policy is None:
+            raise ValueError("snapshot has no policy half (expected "
+                             "'policy' in an envelope or 'spec' in a "
+                             "legacy flat v1 snapshot)")
+        session = cls(RouteSpec.from_dict(policy), runners=runners)
         return session.restore(snap)
 
 

@@ -19,6 +19,7 @@ calibration knobs, backend name) are checked here.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Any, Mapping, Optional, Sequence
 
@@ -29,7 +30,44 @@ from repro.serving.admission import AdmissionSpec
 
 SCHEMA_VERSION = 1
 
+#: Snapshot ENVELOPE contract (version 2) — what
+#: ``SkewRouteSession.snapshot()`` emits::
+#:
+#:     {
+#:       "envelope_version": 2,
+#:       "policy": <RouteSpec.to_dict()>,      # frozen; never mutates
+#:       "state":  {                           # everything that does
+#:         "policy_fingerprint": <policy_fingerprint(spec)>,
+#:         "thresholds": [...],                # live (post-hot-swap)
+#:         "next_id": int,
+#:         "stats": <DispatcherStats.state_dict()>,
+#:         "calibrator": <StreamingCalibrator.state_dict()> | null,
+#:         "pipeline": <PipelineTelemetry.state_dict()> | null,
+#:         "admission": <AdmissionController.state_dict()> | null,
+#:       },
+#:     }
+#:
+#: The split is the multi-replica story: the POLICY half is immutable
+#: and shipped once (or derived from the shared spec); the STATE half is
+#: what replicas exchange every sync round (see
+#: ``distributed.replica_sync`` / ``serving.fabric``), stamped with the
+#: policy fingerprint so state can never silently cross policies.
+#: ``restore()`` also accepts the legacy flat version-1 layout
+#: (``{"schema_version": 1, "spec": ..., <state keys inline>}``) behind
+#: a warn-once deprecation shim.
+ENVELOPE_VERSION = 2
+
 CALIBRATION_POLICIES = ("static", "streaming")
+
+
+def policy_fingerprint(spec: "RouteSpec") -> str:
+    """Short stable digest of a policy: sha256 over the spec's canonical
+    (sorted-key) JSON. State halves carry it so a replica refuses state
+    minted under any other policy — cheaper to compare and to log than
+    the full spec dict, and unlike object identity it survives the
+    JSON round trip."""
+    payload = spec.to_json(sort_keys=True)
+    return hashlib.sha256(payload.encode("utf-8")).hexdigest()[:16]
 
 
 def _float_tuple(xs) -> tuple[float, ...]:

@@ -198,6 +198,47 @@ class RetrievedRouteResult:
     metrics: jax.Array      # [B, 4] float32
 
 
+def topk_sigmoid_decision(logits: jax.Array, thresholds: jax.Array,
+                          n_cand: Optional[jax.Array], *, top_k: int,
+                          metric: str, p_cdf: float, ragged: bool,
+                          use_kernel: bool, interpret: bool):
+    """The decision tail shared by every retrieve-to-decision program:
+    candidate logits [B, N] -> ragged mask -> device top-k -> sigmoid ->
+    skew metrics -> threshold compare. Factored out so the mesh-sharded
+    backend (which gathers per-shard logits over the candidate axis
+    first) runs BYTE-IDENTICAL math after its all_gather — parity with
+    the single-device program is structural, not coincidental."""
+    b, n = logits.shape
+    if ragged:
+        nc = jnp.clip(jnp.asarray(n_cand, jnp.int32), 1, n)
+        col = jnp.arange(n, dtype=jnp.int32)[None, :]
+        logits = jnp.where(col < nc[:, None], logits, _NEG_INF)
+        nv = jnp.minimum(nc, top_k)
+    else:
+        nv = jnp.full((b,), min(n, top_k), jnp.int32)
+    vals, idx = jax.lax.top_k(logits, top_k)      # descending by score
+    probs = jax.nn.sigmoid(vals)                  # paper scores are [0, 1]
+    tiers, diff, metrics = _decision_program(
+        probs, thresholds, nv, metric=metric, p_cdf=p_cdf, ragged=True,
+        use_kernel=use_kernel, interpret=interpret)
+    return idx.astype(jnp.int32), probs, nv, tiers, diff, metrics
+
+
+def score_candidates(feats: jax.Array, query_emb: jax.Array,
+                     w1_t, w1_q, b1, w2, b2, *, use_kernels: bool,
+                     interpret: bool, tile: int) -> jax.Array:
+    """[B, N, Dt] features + [B, Dq] queries -> [B, N] candidate logits
+    (Pallas `triple_score` kernel or its XLA ref). Row-and-candidate
+    local: safe to shard over both the request and candidate axes."""
+    if use_kernels:
+        from repro.kernels.triple_score import kernel as ts_kernel
+        return ts_kernel.triple_score_batched(
+            feats, query_emb, w1_t, w1_q, b1, w2, b2,
+            tile=tile, interpret=interpret)
+    from repro.kernels.triple_score.ref import triple_score_batched_ref
+    return triple_score_batched_ref(feats, query_emb, w1_t, w1_q, b1, w2, b2)
+
+
 @functools.partial(jax.jit, static_argnames=("top_k", "metric", "p_cdf",
                                              "ragged", "use_kernels",
                                              "interpret", "tile"))
@@ -210,29 +251,13 @@ def _retrieved_program(feats: jax.Array, query_emb: jax.Array,
     """The tentpole: scoring -> top-k -> skew metrics -> tier decision in
     ONE jitted device program. Candidate scores never leave HBM; the host
     sees only the [B, K] retrieval output and the [B] tier ids."""
-    b, n, _ = feats.shape
-    if use_kernels:
-        from repro.kernels.triple_score import kernel as ts_kernel
-        logits = ts_kernel.triple_score_batched(
-            feats, query_emb, w1_t, w1_q, b1, w2, b2,
-            tile=tile, interpret=interpret)
-    else:
-        from repro.kernels.triple_score.ref import triple_score_batched_ref
-        logits = triple_score_batched_ref(feats, query_emb,
-                                          w1_t, w1_q, b1, w2, b2)
-    if ragged:
-        nc = jnp.clip(jnp.asarray(n_cand, jnp.int32), 1, n)
-        col = jnp.arange(n, dtype=jnp.int32)[None, :]
-        logits = jnp.where(col < nc[:, None], logits, _NEG_INF)
-        nv = jnp.minimum(nc, top_k)
-    else:
-        nv = jnp.full((b,), min(n, top_k), jnp.int32)
-    vals, idx = jax.lax.top_k(logits, top_k)      # descending by score
-    probs = jax.nn.sigmoid(vals)                  # paper scores are [0, 1]
-    tiers, diff, metrics = _decision_program(
-        probs, thresholds, nv, metric=metric, p_cdf=p_cdf, ragged=True,
-        use_kernel=use_kernels, interpret=interpret)
-    return idx.astype(jnp.int32), probs, nv, tiers, diff, metrics
+    logits = score_candidates(feats, query_emb, w1_t, w1_q, b1, w2, b2,
+                              use_kernels=use_kernels, interpret=interpret,
+                              tile=tile)
+    return topk_sigmoid_decision(
+        logits, thresholds, n_cand, top_k=top_k, metric=metric,
+        p_cdf=p_cdf, ragged=ragged, use_kernel=use_kernels,
+        interpret=interpret)
 
 
 def route_retrieved(feats: jax.Array, query_emb: jax.Array,

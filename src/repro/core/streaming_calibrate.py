@@ -68,6 +68,20 @@ class SlidingWindow:
         """Current window contents (order-free copy)."""
         return self._buf[:len(self)].copy()
 
+    def recent(self, n: int) -> np.ndarray:
+        """The most recent ``min(n, len(self))`` samples, OLDEST first —
+        the chronological tail replica sync publishes as its delta."""
+        n = min(int(n), len(self))
+        if n <= 0:
+            return np.empty(0, np.float32)
+        if self._n <= self.capacity and self._head >= len(self):
+            # ring has not wrapped: chronological order IS buffer order
+            return self._buf[len(self) - n:len(self)].copy()
+        # wrapped ring: chronological order is [head:] then [:head]
+        chron = np.concatenate([self._buf[self._head:len(self)],
+                                self._buf[:self._head]])
+        return chron[-n:].copy()
+
     def quantile(self, q) -> np.ndarray:
         if len(self) == 0:
             raise ValueError("empty window has no quantiles")
@@ -219,7 +233,12 @@ class StreamingCalibrator:
             "thresholds": list(self.config.thresholds),
             "window": self.window.state_dict(),
             "last_swap_at": self._last_swap_at,
-            "events": [dataclasses.asdict(e) for e in self.events],
+            "events": [{"at_sample": e.at_sample,
+                        "observed_shares": list(e.observed_shares),
+                        "target_shares": list(e.target_shares),
+                        "old_thresholds": list(e.old_thresholds),
+                        "new_thresholds": list(e.new_thresholds)}
+                       for e in self.events],
         }
 
     def load_state_dict(self, state: dict) -> None:

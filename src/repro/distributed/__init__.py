@@ -1,1 +1,4 @@
-"""Distribution substrate: sharding rules, fault tolerance, compression."""
+"""Distribution substrate: sharding rules, fault tolerance, compression,
+and the replica state-sync exchange (`replica_sync` — delta-compressed
+calibrator windows + the deterministic weighted-quantile merge that
+`serving.fabric.ReplicaFabric` drives)."""

@@ -89,12 +89,5 @@ def cross_pod_mean_int8(mesh, axis: str = "pod"):
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
-    """shard_map across jax versions: ``jax.shard_map(check_vma=...)`` on
-    current jax, ``jax.experimental.shard_map(check_rep=...)`` on 0.4.x."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is not None:
-        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm_experimental
-    return sm_experimental(body, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_rep=False)
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(body, mesh, in_specs, out_specs)

@@ -1,0 +1,322 @@
+"""Replica state-sync: delta-compressed calibrator exchange + the
+deterministic weighted-quantile merge.
+
+The millions-of-users deployment runs N routing replicas behind a load
+balancer, each seeing a biased slice of traffic (sticky sessions, geo
+affinity, whatever the balancer hashes on). Per-replica streaming
+calibration then converges each replica to thresholds for ITS slice —
+the fleet's tier shares drift apart and the global budget is violated
+even though every replica believes it is on target. Learned routers fix
+this with centralized retraining; SkewRoute's whole state is a few
+thousand window floats and a threshold tuple, so the fix is snapshot
+exchange:
+
+1. **Publish** (:meth:`SyncEndpoint.publish`): each replica ships the
+   window samples it accumulated since its last publish — the DELTA, not
+   the window — int8 block-quantized via `distributed.compression`
+   (4x smaller than f32; difficulty values span a few units, so the
+   absmax block scale costs ~1e-2 absolute error, far below threshold
+   granularity). The payload is JSON-serializable and stamped with the
+   policy fingerprint, so state can never silently cross policies.
+2. **Receive** (:meth:`SyncEndpoint.receive`): deltas land in per-origin
+   replay buffers. Crucially the publisher feeds its OWN delta through
+   the same quantize/dequantize round trip into its own buffer — every
+   endpoint holding the same delta set then has bit-identical buffers,
+   which makes the merge a deterministic function of the payloads alone.
+3. **Merge** (:meth:`SyncEndpoint.merge`): a weighted quantile over the
+   union of the replay buffers — each origin's samples weighted by its
+   lifetime traffic share, so a cold replica's thin window doesn't drag
+   the fleet — cut at ``cumsum(target_shares)[:-1]``, exactly the rule
+   `StreamingCalibrator.fit_config` applies locally. The merged config
+   is hot-swapped through the ONE existing path
+   (``dispatcher.apply_config``), and the local drift loop's cooldown is
+   re-armed so it doesn't immediately refit from its biased local window
+   and undo the merge.
+
+Everything here is host-side numpy + JSON: the fabric in
+`serving.fabric` drives it in-process, and the same payloads could ride
+any real transport (the delta dict IS the wire format).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.streaming_calibrate import SlidingWindow
+
+__all__ = ["StateDelta", "SyncEndpoint", "weighted_quantile",
+           "delta_nbytes"]
+
+
+def _quantize(samples: np.ndarray) -> tuple[list[int], list[float]]:
+    """int8 block-quantize a float sample vector via
+    `distributed.compression.quantize_int8`. The quantizer pads the last
+    block with zeros, which quantize to exactly 0 — so the wire carries
+    only the first ``len(samples)`` values and the decoder re-pads,
+    keeping small deltas smaller than raw f32 instead of paying a full
+    128-value block."""
+    from repro.distributed.compression import quantize_int8
+    q, scales = quantize_int8(np.asarray(samples, np.float32))
+    flat = np.asarray(q).ravel()[:len(samples)]
+    return ([int(v) for v in flat],
+            [float(s) for s in np.asarray(scales)])
+
+
+def _dequantize(q: Sequence[int], scales: Sequence[float],
+                n: int) -> np.ndarray:
+    from repro.distributed.compression import BLOCK, dequantize_int8
+    qa = np.zeros(len(scales) * BLOCK, np.int8)
+    qa[:n] = np.asarray(q, np.int8)
+    sa = np.asarray(scales, np.float32)
+    return np.asarray(dequantize_int8(qa.reshape(-1, BLOCK), sa,
+                                      (n,), np.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class StateDelta:
+    """One replica's sync payload: the calibrator-window samples it
+    accumulated since its previous publish, int8-compressed, plus the
+    counters the merge weights by. ``to_dict``/``from_dict`` are the
+    wire format (plain JSON)."""
+
+    replica: str
+    seq: int                         # publisher's sync-round counter
+    policy_fingerprint: str
+    from_seen: int                   # window.total_seen at previous publish
+    to_seen: int                     # ... and at this one
+    n_samples: int                   # samples actually shipped (<= window)
+    q: tuple[int, ...]               # int8 blocks, flattened
+    scales: tuple[float, ...]        # per-128-block absmax scales
+    thresholds: tuple[float, ...]    # publisher's live thresholds (telemetry)
+
+    def samples(self) -> np.ndarray:
+        if self.n_samples == 0:
+            return np.empty(0, np.float32)
+        return _dequantize(self.q, self.scales, self.n_samples)
+
+    def to_dict(self) -> dict:
+        return {
+            "replica": self.replica, "seq": self.seq,
+            "policy_fingerprint": self.policy_fingerprint,
+            "from_seen": self.from_seen, "to_seen": self.to_seen,
+            "n_samples": self.n_samples,
+            "q": list(self.q), "scales": list(self.scales),
+            "thresholds": list(self.thresholds),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "StateDelta":
+        return cls(replica=str(d["replica"]), seq=int(d["seq"]),
+                   policy_fingerprint=str(d["policy_fingerprint"]),
+                   from_seen=int(d["from_seen"]), to_seen=int(d["to_seen"]),
+                   n_samples=int(d["n_samples"]),
+                   q=tuple(int(v) for v in d["q"]),
+                   scales=tuple(float(s) for s in d["scales"]),
+                   thresholds=tuple(float(t) for t in d["thresholds"]))
+
+
+def delta_nbytes(delta: StateDelta) -> tuple[int, int]:
+    """(compressed, raw-f32) wire sizes of a delta's sample payload."""
+    return len(delta.q) + 4 * len(delta.scales), 4 * delta.n_samples
+
+
+def weighted_quantile(values: np.ndarray, weights: np.ndarray,
+                      qs: Sequence[float]) -> np.ndarray:
+    """Deterministic weighted quantiles (midpoint / type-7-like rule).
+
+    Stable mergesort + cumulative midpoint weights + linear
+    interpolation: a pure function of (values, weights) with no RNG and
+    no platform-dependent reduction order, so every replica computing it
+    over the same payload set gets bit-identical cuts. With equal
+    weights it agrees with ``np.quantile`` to O(1/n) (midpoint positions
+    vs type-7's endpoint positions) — determinism is the contract here,
+    not a particular interpolation family.
+    """
+    v = np.asarray(values, np.float64)
+    w = np.asarray(weights, np.float64)
+    if v.size == 0:
+        raise ValueError("weighted_quantile over zero samples")
+    if v.shape != w.shape:
+        raise ValueError(f"values {v.shape} vs weights {w.shape}")
+    if np.any(w < 0) or not np.all(np.isfinite(w)):
+        raise ValueError("weights must be finite and >= 0")
+    total = w.sum()
+    if total <= 0:               # degenerate: fall back to equal weights
+        w = np.ones_like(w)
+        total = w.sum()
+    order = np.argsort(v, kind="stable")
+    v, w = v[order], w[order]
+    cum = np.cumsum(w) - 0.5 * w          # midpoint of each sample's mass
+    pos = cum / total
+    return np.interp(np.asarray(qs, np.float64), pos, v)
+
+
+class SyncEndpoint:
+    """One replica's half of the sync fabric: publishes deltas of its own
+    calibrator window, replays peers' deltas into per-origin buffers, and
+    merges the union into fleet-consistent thresholds.
+
+    ``peer_window`` bounds each origin's replay buffer (default: the
+    local calibrator's window capacity) — sync traffic is windowed the
+    same way local traffic is, so stale eras age out of the merge.
+    """
+
+    def __init__(self, name: str, session, *,
+                 peer_window: Optional[int] = None):
+        from repro.api.spec import policy_fingerprint
+        self.name = str(name)
+        self.session = session
+        cal = session.calibrator
+        if cal is None:
+            raise ValueError(
+                f"replica {name!r} has no streaming calibrator — sync "
+                f"exchanges calibrator windows; use "
+                f"CalibrationSpec(policy='streaming')")
+        self.fingerprint = policy_fingerprint(session.spec)
+        self.peer_window = int(peer_window or cal.window.capacity)
+        self.seq = 0
+        # Publish starts from the window as it stands at join: samples a
+        # bootstrap restored into it are the SOURCE replica's traffic
+        # (already published under its name) — republishing them here
+        # would double-count that distribution in every merge.
+        self._published_seen = cal.window.total_seen
+        self.buffers: dict[str, SlidingWindow] = {}
+        self.traffic: dict[str, int] = {}  # origin -> lifetime total_seen
+        self.n_merges = 0
+        self.bytes_sent = 0
+        self.bytes_sent_raw = 0
+
+    # -- bootstrap ------------------------------------------------------------
+
+    def adopt_view(self, src: "SyncEndpoint") -> None:
+        """Inherit ``src``'s replay buffers and traffic counters (the
+        bootstrap path). A joiner that warm-starts from a member's
+        state-half must also merge from that member's view of the fleet:
+        with empty buffers its weighted-quantile merge disagrees with
+        everyone else's until every origin's buffer fully turns over,
+        and the fleet loses its replicas-agree-exactly property for that
+        whole stretch. After a full-mesh round all members hold
+        identical buffers, so any member's view is THE fleet view."""
+        if src.fingerprint != self.fingerprint:
+            raise ValueError(
+                f"cannot adopt peer view across policies "
+                f"({src.fingerprint!r} vs {self.fingerprint!r})")
+        for origin, buf in src.buffers.items():
+            mine = SlidingWindow(buf.capacity)
+            mine.load_state_dict(buf.state_dict())
+            self.buffers[origin] = mine
+        self.traffic.update(src.traffic)
+
+    # -- publish --------------------------------------------------------------
+
+    def publish(self) -> dict:
+        """This replica's delta since its last publish, as the JSON wire
+        dict. Also self-receives it (through the same quantize round
+        trip), so local samples enter the merge exactly as peers see
+        them."""
+        cal = self.session.calibrator
+        win = cal.window
+        fresh = min(win.total_seen - self._published_seen, win.capacity)
+        samples = win.recent(fresh)
+        q, scales = (_quantize(samples) if samples.size else ([], []))
+        delta = StateDelta(
+            replica=self.name, seq=self.seq,
+            policy_fingerprint=self.fingerprint,
+            from_seen=self._published_seen, to_seen=win.total_seen,
+            n_samples=int(samples.size),
+            q=tuple(q), scales=tuple(scales),
+            thresholds=tuple(self.session.thresholds))
+        self._published_seen = win.total_seen
+        self.seq += 1
+        comp, raw = delta_nbytes(delta)
+        self.bytes_sent += comp
+        self.bytes_sent_raw += raw
+        self.receive(delta.to_dict())
+        return delta.to_dict()
+
+    # -- receive --------------------------------------------------------------
+
+    def receive(self, payload: Mapping) -> None:
+        """Replay one delta (wire dict or :class:`StateDelta`) into its
+        origin's buffer. Policy mismatches are refused loudly; stale or
+        replayed sequence numbers are dropped idempotently."""
+        delta = (payload if isinstance(payload, StateDelta)
+                 else StateDelta.from_dict(payload))
+        if delta.policy_fingerprint != self.fingerprint:
+            raise ValueError(
+                f"delta from {delta.replica!r} carries policy fingerprint "
+                f"{delta.policy_fingerprint!r} but replica {self.name!r} "
+                f"runs {self.fingerprint!r}; state never transfers across "
+                f"policies")
+        last = self.traffic.get(delta.replica)
+        if last is not None and delta.to_seen <= last:
+            return                        # duplicate / out-of-order replay
+        buf = self.buffers.get(delta.replica)
+        if buf is None:
+            buf = self.buffers[delta.replica] = SlidingWindow(
+                self.peer_window)
+        if delta.n_samples:
+            buf.push(delta.samples())
+        self.traffic[delta.replica] = delta.to_seen
+
+    # -- merge ----------------------------------------------------------------
+
+    def merge(self, apply: bool = True):
+        """Weighted-quantile thresholds over every origin's replay buffer
+        (self included). Returns the merged :class:`RouterConfig`, or
+        ``None`` while the union holds fewer samples than the local
+        calibrator's ``min_samples`` floor.
+
+        ``apply=True`` hot-swaps it through ``dispatcher.apply_config``
+        and re-arms the drift cooldown (a merge IS a swap: the local
+        loop judging drift right after would mix pre-merge samples with
+        post-merge thresholds).
+        """
+        cal = self.session.calibrator
+        parts, weights = [], []
+        for origin in sorted(self.buffers):
+            vals = self.buffers[origin].values()
+            if vals.size == 0:
+                continue
+            # chronological tail not needed for quantiles; per-sample
+            # weight = origin's lifetime traffic spread over its buffer
+            share = float(self.traffic.get(origin, 0))
+            parts.append(vals)
+            weights.append(np.full(vals.size, share / vals.size
+                                   if share > 0 else 0.0))
+        if not parts:
+            return None
+        values = np.concatenate(parts)
+        if values.size < cal.min_samples:
+            return None
+        cuts = np.cumsum(cal.target_shares)[:-1]
+        ts = [float(t) for t in
+              weighted_quantile(values, np.concatenate(weights), cuts)]
+        for i in range(1, len(ts)):       # ties can collapse; keep ascending
+            ts[i] = max(ts[i], ts[i - 1])
+        merged = dataclasses.replace(cal.config, thresholds=tuple(ts))
+        if apply:
+            self.session.dispatcher.apply_config(merged)
+            cal._last_swap_at = cal.window.total_seen
+            self.n_merges += 1
+        return merged
+
+    # -- telemetry ------------------------------------------------------------
+
+    def telemetry(self) -> dict:
+        return {
+            "replica": self.name,
+            "seq": self.seq,
+            "n_merges": self.n_merges,
+            "bytes_sent": self.bytes_sent,
+            "bytes_sent_raw": self.bytes_sent_raw,
+            "compression_ratio": (self.bytes_sent_raw
+                                  / max(self.bytes_sent, 1)),
+            "origins": {o: {"buffered": len(b),
+                            "traffic": self.traffic.get(o, 0)}
+                        for o, b in sorted(self.buffers.items())},
+            "thresholds": [float(t) for t in self.session.thresholds],
+        }

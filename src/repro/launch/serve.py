@@ -111,10 +111,13 @@ def main() -> None:
           f"{s.n_recalibrations} drift recalibrations")
     print(f"est. cost ${s.total_cost:.4f} vs all-large ${all_large:.4f} "
           f"({100 * (1 - s.total_cost / all_large):.0f}% saved)")
-    # hand-off artifact: this session's live state, as bytes
+    # hand-off artifact: this session's live state, as a policy/state
+    # envelope (the state half alone is what replica sync ships)
     snap = session.snapshot()
-    cal_state = snap["calibrator"] or {"window": {"buffer": []}}
-    print(f"snapshot: thresholds={snap['thresholds']}, "
+    state = snap["state"]
+    cal_state = state["calibrator"] or {"window": {"buffer": []}}
+    print(f"snapshot envelope v{snap['envelope_version']}: "
+          f"thresholds={state['thresholds']}, "
           f"{len(cal_state['window']['buffer'])} window samples — "
           f"restorable via SkewRouteSession.from_snapshot")
 

@@ -7,6 +7,9 @@ from repro.serving.admission import (  # noqa: F401
     AdmissionController,
     AdmissionSpec,
 )
+from repro.serving.fabric import (  # noqa: F401
+    ReplicaFabric,
+)
 from repro.serving.pipeline import (  # noqa: F401
     ExecutedBatch,
     PipelineTelemetry,

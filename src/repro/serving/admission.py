@@ -54,14 +54,24 @@ class AdmissionSpec:
     """Admission-control policy knobs (frozen, JSON-round-trippable —
     rides inside :class:`repro.api.RouteSpec`).
 
-    Pressure is a unitless saturation signal for the MOST EXPENSIVE
-    tier: ``max(queue_depth / queue_depth_slo, p99 / p99_slo)``,
-    smoothed by an EWMA with weight ``pressure_beta`` on the newest
-    sample. 1.0 means "exactly at the configured limit".
+    Pressure is a unitless saturation signal per tier:
+    ``max(queue_depth / queue_depth_slo, p99 / p99_slo)``, smoothed by
+    an EWMA with weight ``pressure_beta`` on the newest sample. 1.0
+    means "exactly at the configured limit". The MOST EXPENSIVE tier's
+    pressure drives the tighten/relax loop and engages spill; every
+    spillable tier (1..top) keeps its own hysteresis flag so demotions
+    cascade PAST a saturated middle tier instead of piling onto it.
     """
 
     cost_budget_per_query: Optional[float] = None  # $/query ceiling
     p99_slo: Optional[float] = None                # seconds; None = ignore
+    # Recency horizon of the p99 probe (seconds): load reporters only
+    # quote completions this far back, so a tier that went quiet after
+    # tightening doesn't show its burst-era p99 forever. Policy, not a
+    # runner knob — it serializes with the spec so every replica judges
+    # pressure over the same lookback. None = the reporter's default
+    # (LoadRunner uses 5x its slo_latency).
+    p99_horizon: Optional[float] = None
     queue_depth_slo: int = 64       # top-tier waiting depth = pressure 1.0
     spill_on: float = 1.0           # smoothed pressure that ENGAGES spill
     spill_off: float = 0.6          # ... and DISENGAGES it (hysteresis)
@@ -81,6 +91,16 @@ class AdmissionSpec:
                              f"{self.cost_budget_per_query}")
         if self.p99_slo is not None and self.p99_slo <= 0:
             raise ValueError(f"p99_slo must be > 0, got {self.p99_slo}")
+        if self.p99_horizon is not None:
+            if self.p99_horizon <= 0:
+                raise ValueError(f"p99_horizon must be > 0, got "
+                                 f"{self.p99_horizon}")
+            if self.p99_slo is not None and self.p99_horizon < self.p99_slo:
+                raise ValueError(
+                    f"p99_horizon ({self.p99_horizon}) < p99_slo "
+                    f"({self.p99_slo}): a lookback shorter than the SLO "
+                    f"cannot even contain one SLO-length completion, so "
+                    f"the latency probe would never see a breach")
         if self.queue_depth_slo < 1:
             raise ValueError(f"queue_depth_slo must be >= 1, got "
                              f"{self.queue_depth_slo}")
@@ -181,8 +201,14 @@ class AdmissionController:
         self.baseline_shares = tuple(calibrator.target_shares)
         self.shares = tuple(calibrator.target_shares)
         # -- mutable state (all of it JSON-serializable) ----------------------
-        self.spill_active = False
-        self.pressure = 0.0            # EWMA'd saturation signal
+        # Per-tier pressure EWMAs + spill flags for every tier that CAN
+        # spill (1..top; tier 0 has nowhere to go). The top tier's pair
+        # is also exposed as .pressure/.spill_active — the legacy names
+        # the 2-tier telemetry and v1 snapshots use.
+        self.tier_pressure: dict[int, float] = {
+            t: 0.0 for t in range(1, n_tiers)}
+        self.tier_spill: dict[int, bool] = {
+            t: False for t in range(1, n_tiers)}
         self.cost_per_query = None     # EWMA'd realized $/query
         self.n_seen = 0                # requests that passed apply()
         self.n_spilled = 0
@@ -204,14 +230,24 @@ class AdmissionController:
             "p99_latency": _finite(p99_latency),
         }
 
-    def _raw_pressure(self) -> float:
-        load = self._tier_load.get(self.top)
+    def _raw_pressure(self, tier: Optional[int] = None) -> float:
+        load = self._tier_load.get(self.top if tier is None else tier)
         if load is None:
             return 0.0
         p = load["queue_depth"] / self.spec.queue_depth_slo
         if self.spec.p99_slo is not None and load["p99_latency"] is not None:
             p = max(p, load["p99_latency"] / self.spec.p99_slo)
         return float(p)
+
+    # -- legacy 2-tier names: the TOP tier's pressure/spill pair --------------
+
+    @property
+    def pressure(self) -> float:
+        return self.tier_pressure[self.top]
+
+    @property
+    def spill_active(self) -> bool:
+        return self.tier_spill[self.top]
 
     # -- the control loop ------------------------------------------------------
 
@@ -237,14 +273,16 @@ class AdmissionController:
         quantile tighten/relax at most once per ``control_interval``
         requests. Returns a re-fit config to hot-swap, or ``None``."""
         spec = self.spec
-        self.pressure += spec.pressure_beta * (self._raw_pressure()
-                                               - self.pressure)
-        if not self.spill_active and self.pressure >= spec.spill_on:
-            self.spill_active = True
-            self._event("spill_on")
-        elif self.spill_active and self.pressure <= spec.spill_off:
-            self.spill_active = False
-            self._event("spill_off")
+        for t in self.tier_pressure:
+            p = self.tier_pressure[t]
+            p += spec.pressure_beta * (self._raw_pressure(t) - p)
+            self.tier_pressure[t] = p
+            if not self.tier_spill[t] and p >= spec.spill_on:
+                self.tier_spill[t] = True
+                self._event("spill_on", tier=t)
+            elif self.tier_spill[t] and p <= spec.spill_off:
+                self.tier_spill[t] = False
+                self._event("spill_off", tier=t)
 
         if self.n_seen - self._last_control < spec.control_interval:
             return None
@@ -301,6 +339,16 @@ class AdmissionController:
         q = min(1.0, cut + self.spec.spill_margin)
         return float(self.calibrator.window.quantile(q))
 
+    def spill_target(self) -> int:
+        """Where spilled top-tier requests land: the first tier below the
+        top whose own spill flag is NOT engaged — a saturated middle tier
+        is skipped, not piled onto. Bounded at tier 0 (which has no
+        pressure flag), so the cascade always terminates."""
+        target = self.top - 1
+        while target > 0 and self.tier_spill[target]:
+            target -= 1
+        return target
+
     def apply(self, tiers: np.ndarray,
               difficulty: np.ndarray) -> tuple[np.ndarray, int]:
         """Demote this batch's marginal top-tier requests while spill is
@@ -319,7 +367,7 @@ class AdmissionController:
                 spilled = int(marginal.sum())
                 if spilled:
                     tiers = tiers.copy()
-                    tiers[marginal] = self.top - 1
+                    tiers[marginal] = self.spill_target()
         self.n_seen += n
         self.n_spilled += spilled
         batch_cost = float(self._tier_cost[tiers].mean())
@@ -336,6 +384,9 @@ class AdmissionController:
         return {
             "spill_active": self.spill_active,
             "pressure": self.pressure,
+            "tier_pressure": {str(t): p
+                              for t, p in self.tier_pressure.items()},
+            "tier_spill": {str(t): s for t, s in self.tier_spill.items()},
             "cost_per_query": self.cost_per_query,
             "target_shares": list(self.shares),
             "baseline_shares": list(self.baseline_shares),
@@ -353,8 +404,13 @@ class AdmissionController:
         baseline shares in the calibration spec — policy, not state)."""
         return {
             "shares": list(self.shares),
+            # flat top-tier pair kept alongside the per-tier dicts so v1
+            # 2-tier snapshots and this layout read the same way
             "spill_active": self.spill_active,
             "pressure": self.pressure,
+            "tier_pressure": {str(t): p
+                              for t, p in self.tier_pressure.items()},
+            "tier_spill": {str(t): s for t, s in self.tier_spill.items()},
             "cost_per_query": self.cost_per_query,
             "n_seen": self.n_seen,
             "n_spilled": self.n_spilled,
@@ -373,8 +429,23 @@ class AdmissionController:
                              f"shares, controller has {len(self.shares)}")
         self.shares = shares
         self.calibrator.target_shares = shares  # keep the loops convergent
-        self.spill_active = bool(state["spill_active"])
-        self.pressure = float(state["pressure"])
+        # per-tier dicts when present; legacy flat state only knows the
+        # top tier's pair (lower tiers were implicitly calm back then)
+        tp = state.get("tier_pressure")
+        ts = state.get("tier_spill")
+        for t in self.tier_pressure:
+            if tp is not None and str(t) in tp:
+                self.tier_pressure[t] = float(tp[str(t)])
+            elif t == self.top:
+                self.tier_pressure[t] = float(state["pressure"])
+            else:
+                self.tier_pressure[t] = 0.0
+            if ts is not None and str(t) in ts:
+                self.tier_spill[t] = bool(ts[str(t)])
+            elif t == self.top:
+                self.tier_spill[t] = bool(state["spill_active"])
+            else:
+                self.tier_spill[t] = False
         cpq = state["cost_per_query"]
         self.cost_per_query = None if cpq is None else float(cpq)
         self.n_seen = int(state["n_seen"])

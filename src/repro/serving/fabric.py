@@ -1,0 +1,136 @@
+"""`ReplicaFabric`: an in-process fleet of routing replicas wired
+through the `distributed.replica_sync` exchange.
+
+This is the deployment shape the ROADMAP's millions-of-users story
+lands on: ONE declarative `RouteSpec`, N `SkewRouteSession` replicas
+(each behind its own slice of the load balancer), and a periodic sync
+round instead of centralized retraining. The fabric is deliberately
+transport-free — `sync_round` moves the exact JSON wire dicts the
+endpoints publish, through an in-memory full mesh. A real deployment
+swaps the loop for a gossip bus or a coordinator without touching the
+protocol: the payloads ARE the protocol.
+
+Two contracts worth reading twice:
+
+* **Replicas share a policy, not state.** ``add_replica`` refuses a
+  session whose spec fingerprint differs from the fleet's. Bootstrap
+  (``bootstrap_from=``) ships ONLY the ``state`` half of the source
+  replica's snapshot envelope through ``restore_state`` — the policy
+  half never travels, because every replica already holds it by
+  construction.
+* **Merges are deterministic.** After a full-mesh round every endpoint
+  holds the same delta set, and the weighted-quantile merge is a pure
+  function of that set — so all replicas land on IDENTICAL thresholds,
+  not merely similar ones (asserted in tests/test_fabric.py).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Mapping, Optional
+
+from repro.distributed.replica_sync import SyncEndpoint
+
+__all__ = ["ReplicaFabric"]
+
+
+class ReplicaFabric:
+    """N named sessions + their sync endpoints, full-mesh in process."""
+
+    def __init__(self, *, peer_window: Optional[int] = None):
+        self.peer_window = peer_window
+        self.endpoints: dict[str, SyncEndpoint] = {}
+        self.n_rounds = 0
+
+    def __len__(self) -> int:
+        return len(self.endpoints)
+
+    @property
+    def sessions(self) -> dict:
+        return {n: e.session for n, e in self.endpoints.items()}
+
+    # -- membership -----------------------------------------------------------
+
+    def add_replica(self, name: str, session, *,
+                    bootstrap_from: Optional[str] = None) -> SyncEndpoint:
+        """Join a session to the fleet. All members must be built from
+        the SAME RouteSpec (checked by policy fingerprint, loudly).
+
+        ``bootstrap_from=`` warm-starts a cold replica from an existing
+        member: the source's snapshot is taken and ONLY its ``state``
+        half is restored — thresholds, calibrator window, counters —
+        which is exactly what a mid-run join needs to start routing like
+        the fleet instead of like a fresh deploy.
+        """
+        name = str(name)
+        if name in self.endpoints:
+            raise ValueError(f"replica {name!r} already joined")
+        if bootstrap_from is not None:
+            src = self.endpoints.get(bootstrap_from)
+            if src is None:
+                raise ValueError(f"bootstrap_from={bootstrap_from!r} is not "
+                                 f"a fleet member "
+                                 f"({sorted(self.endpoints) or 'empty'})")
+            # state half only — and BEFORE the endpoint exists, so the
+            # inherited window counts as bootstrap, not as this
+            # replica's own publishable traffic
+            session.restore_state(src.session.snapshot()["state"])
+        ep = SyncEndpoint(name, session, peer_window=self.peer_window)
+        if bootstrap_from is not None:
+            # ...and the source's replay-buffer view of the fleet, so
+            # the joiner's very first merge agrees with everyone else's
+            # instead of drifting until its buffers turn over
+            ep.adopt_view(self.endpoints[bootstrap_from])
+        if self.endpoints:
+            fleet_fp = next(iter(self.endpoints.values())).fingerprint
+            if ep.fingerprint != fleet_fp:
+                raise ValueError(
+                    f"replica {name!r} runs policy {ep.fingerprint!r} but "
+                    f"the fleet runs {fleet_fp!r}; one RouteSpec per "
+                    f"fabric — build the session from the fleet's spec")
+        self.endpoints[name] = ep
+        return ep
+
+    # -- the sync round -------------------------------------------------------
+
+    def sync_round(self) -> dict:
+        """One full exchange: every endpoint publishes its delta, every
+        delta reaches every OTHER endpoint (publishers self-receive at
+        publish time), then every endpoint merges and hot-swaps. The
+        wire dicts make a JSON round trip so the in-process fabric can't
+        accidentally lean on shared object identity.
+
+        Returns a per-replica report (thresholds after merge, bytes
+        moved) — the convergence bench's raw material.
+        """
+        names = sorted(self.endpoints)
+        payloads = {n: json.loads(json.dumps(self.endpoints[n].publish()))
+                    for n in names}
+        for n in names:
+            for origin, payload in payloads.items():
+                if origin != n:
+                    self.endpoints[n].receive(payload)
+        report: dict = {"round": self.n_rounds, "replicas": {}}
+        for n in names:
+            ep = self.endpoints[n]
+            merged = ep.merge(apply=True)
+            report["replicas"][n] = {
+                "merged": merged is not None,
+                "thresholds": [float(t) for t in ep.session.thresholds],
+                "bytes_sent": ep.bytes_sent,
+            }
+        self.n_rounds += 1
+        return report
+
+    # -- telemetry ------------------------------------------------------------
+
+    def telemetry(self) -> dict:
+        eps = {n: self.endpoints[n].telemetry()
+               for n in sorted(self.endpoints)}
+        return {
+            "n_replicas": len(self.endpoints),
+            "n_rounds": self.n_rounds,
+            "bytes_sent": sum(e["bytes_sent"] for e in eps.values()),
+            "bytes_sent_raw": sum(e["bytes_sent_raw"] for e in eps.values()),
+            "endpoints": eps,
+        }

@@ -125,6 +125,7 @@ def canonical_load_runner(with_admission: bool, trace: TraceSpec,
                            RouteSpec, build)  # serving -> api edge soft
     admission = AdmissionSpec(
         cost_budget_per_query=3e-4, p99_slo=slo_latency,
+        p99_horizon=5.0 * slo_latency,  # explicit: serializes with policy
         queue_depth_slo=24, control_interval=32,
         spill_on=1.0, spill_off=0.5) if with_admission else None
     spec = RouteSpec(
@@ -173,9 +174,16 @@ class LoadRunner:
             raise ValueError(f"{len(models)} tiers but "
                              f"{len(self.tier_quality)} tier_quality values")
         self.record_every = int(record_every)
-        # latency-pressure probes only look this far back: an SLO
+        # Latency-pressure probes only look this far back: an SLO
         # controller needs the current tail, and a tier that went quiet
-        # after tightening would otherwise show its burst-era p99 forever
+        # after tightening would otherwise show its burst-era p99
+        # forever. The horizon is POLICY (AdmissionSpec.p99_horizon —
+        # every replica must judge pressure over the same lookback); the
+        # ctor arg only overrides it for ad-hoc experiments, and the
+        # 5x-SLO default covers sessions without admission control.
+        adm = getattr(session.spec, "admission", None)
+        if p99_horizon is None and adm is not None:
+            p99_horizon = adm.p99_horizon
         self.p99_horizon = (float(p99_horizon) if p99_horizon is not None
                             else 5.0 * self.slo_latency)
         self._next_id = 0

@@ -326,3 +326,158 @@ def test_pipeline_admission_requires_attached_calibrator():
     ctrl, _ = mk_controller(AdmissionSpec())
     with pytest.raises(ValueError, match="calibrator"):
         ServingPipeline(d, {0: list, 1: list}, admission=ctrl)
+
+
+# -- >=3-tier cascade spill ---------------------------------------------------
+
+TIER3_MODELS = ("qwen7b", "qwen14b", "qwen72b")
+
+
+def mk_controller3(spec, window_vals=None, shares=(0.5, 0.3, 0.2)):
+    cal = StreamingCalibrator(
+        RouterConfig(metric="entropy", thresholds=(0.4, 0.7)), list(shares),
+        window=256, min_samples=32, tolerance=0.05, cooldown=64)
+    if window_vals is not None:
+        cal.window.push(np.asarray(window_vals, np.float32))
+    return AdmissionController(cal, CostModel(), TIER3_MODELS, spec), cal
+
+
+def test_cascade_spills_past_a_saturated_middle_tier():
+    ctrl, _ = mk_controller3(spill_spec(), uniform_window())
+    ctrl.observe_tier_load(2, queue_depth=20)   # top saturated
+    ctrl.observe_tier_load(1, queue_depth=20)   # ...and the next one too
+    ctrl.control_step()
+    assert ctrl.tier_spill == {1: True, 2: True}
+    assert ctrl.spill_target() == 0             # skip the saturated middle
+    tiers = np.array([2, 2, 1, 0])
+    # cut = 1 - 0.2 = 0.8; marginal band = (0.8, 0.9] quantiles
+    out, spilled = ctrl.apply(tiers, np.array([0.85, 0.99, 0.5, 0.1]))
+    assert out.tolist() == [0, 2, 1, 0] and spilled == 1
+    # middle tier recovers -> demotions land one tier down again
+    ctrl.observe_tier_load(1, queue_depth=2)    # 0.2 <= spill_off
+    ctrl.control_step()
+    assert ctrl.tier_spill == {1: False, 2: True}
+    assert ctrl.spill_target() == 1
+    out, spilled = ctrl.apply(np.array([2]), np.array([0.85]))
+    assert out.tolist() == [1] and spilled == 1
+
+
+def test_cascade_is_bounded_at_tier_zero():
+    ctrl, _ = mk_controller3(spill_spec(), uniform_window())
+    for t in (1, 2):
+        ctrl.observe_tier_load(t, queue_depth=50)
+    ctrl.control_step()
+    assert ctrl.spill_target() == 0             # never negative
+    # spill_on/off events carry the tier that toggled
+    tiers = {e["tier"] for e in ctrl.events if e["kind"] == "spill_on"}
+    assert tiers == {1, 2}
+
+
+def test_cascade_hysteresis_is_per_tier():
+    ctrl, _ = mk_controller3(spill_spec(), uniform_window())
+    ctrl.observe_tier_load(2, queue_depth=20)
+    ctrl.observe_tier_load(1, queue_depth=20)
+    ctrl.control_step()
+    # middle tier drops between watermarks: flag stays engaged (sticky)
+    ctrl.observe_tier_load(1, queue_depth=7)
+    ctrl.control_step()
+    assert ctrl.tier_spill[1] and ctrl.spill_target() == 0
+    # two-tier topologies are untouched by the cascade: top-1 is tier 0
+    ctrl2, _ = mk_controller(spill_spec(), uniform_window())
+    ctrl2.observe_tier_load(1, queue_depth=20)
+    ctrl2.control_step()
+    assert ctrl2.spill_target() == 0
+
+
+def test_cascade_state_round_trips_and_loads_legacy_flat_state():
+    ctrl, _ = mk_controller3(spill_spec(), uniform_window())
+    ctrl.observe_tier_load(2, queue_depth=20)
+    ctrl.observe_tier_load(1, queue_depth=20)
+    ctrl.control_step()
+    state = json.loads(json.dumps(ctrl.state_dict()))
+    assert state["tier_spill"] == {"1": True, "2": True}
+    assert state["spill_active"] is True        # flat pair still present
+    ctrl2, _ = mk_controller3(spill_spec(), uniform_window())
+    ctrl2.load_state_dict(state)
+    assert ctrl2.state_dict() == ctrl.state_dict()
+    assert ctrl2.spill_target() == 0
+    # legacy flat state (no per-tier dicts): top pair maps through,
+    # lower tiers default to calm
+    legacy = {k: v for k, v in state.items()
+              if k not in ("tier_pressure", "tier_spill")}
+    ctrl3, _ = mk_controller3(spill_spec(), uniform_window())
+    ctrl3.load_state_dict(legacy)
+    assert ctrl3.spill_active and ctrl3.tier_spill == {1: False, 2: True}
+    assert ctrl3.spill_target() == 1
+
+
+def test_three_tier_loadgen_cascade_regression():
+    """End-to-end 3-tier replay: with tiers 2 AND 1 starved of capacity,
+    spilled requests must land on tier 0 instead of piling onto the
+    equally-saturated middle tier."""
+    from repro.api import CalibrationSpec, RouteSpec, build
+    from repro.serving.loadgen import (LoadRunner, TraceSpec,
+                                       make_pool_runners, make_pools)
+    spec = RouteSpec(
+        # cuts at the trace's ~40/75% entropy quantiles -> a real mix
+        # lands on every tier (entropy tops out at log2(40) ~= 5.3)
+        metric="entropy", thresholds=(3.1, 4.85), top_k=40,
+        tier_names=TIER3_MODELS,
+        calibration=CalibrationSpec(policy="streaming",
+                                    target_shares=(0.4, 0.35, 0.25),
+                                    window=256, min_samples=48,
+                                    tolerance=0.5, cooldown=10000),
+        admission=AdmissionSpec(p99_slo=1.0, p99_horizon=5.0,
+                                queue_depth_slo=4, spill_on=1.0,
+                                spill_off=0.3, spill_margin=0.25,
+                                pressure_beta=1.0, min_top_share=0.25))
+    # tier 0 has real headroom; tiers 1 and 2 are walls
+    pools = make_pools({0: [4.0] * 8, 1: [0.05], 2: [0.05]},
+                       batch_slots={0: 32, 1: 2, 2: 2},
+                       base_token_time=8e-5)
+    session = build(spec, runners=make_pool_runners(pools))
+    trace = TraceSpec(name="cascade3", steps=60, seed=11, base_rate=30.0,
+                      top_k=40)
+    report = LoadRunner(session, pools, slo_latency=1.0).run(trace)
+    adm = session.admission
+    assert adm.tier_spill[2] or adm.tier_spill[1]
+    assert adm.n_spilled > 0
+    executed = report.summary["tier_counts_executed"]
+    decided = session.stats.tier_counts
+    # the cascade drains spill into tier 0: it executes MORE than it was
+    # decided, while the saturated tiers execute less
+    assert executed.get("0", 0) > decided[0]
+
+
+# -- p99 recency horizon (promoted into AdmissionSpec) ------------------------
+
+def test_p99_horizon_validates_against_slo():
+    with pytest.raises(ValueError, match="p99_horizon"):
+        AdmissionSpec(p99_horizon=0.0)
+    with pytest.raises(ValueError, match="p99_horizon"):
+        AdmissionSpec(p99_slo=2.0, p99_horizon=1.0)
+    spec = AdmissionSpec(p99_slo=1.0, p99_horizon=5.0)
+    assert AdmissionSpec.from_dict(json.loads(json.dumps(
+        spec.to_dict()))) == spec
+    AdmissionSpec(p99_horizon=3.0)  # fine without an SLO to compare to
+
+
+def test_load_runner_takes_horizon_from_the_policy():
+    from repro.api import build
+    from repro.serving.loadgen import (LoadRunner, make_pool_runners,
+                                       make_pools)
+
+    def runner_for(admission, **kw):
+        pools = make_pools({0: [1.0], 1: [1.0]})
+        session = build(mk_route_spec(admission),
+                        runners=make_pool_runners(pools))
+        return LoadRunner(session, pools, slo_latency=2.0, **kw)
+
+    # spec horizon serializes with the policy and wins over the default
+    spec_h = AdmissionSpec(p99_slo=2.0, p99_horizon=7.5)
+    assert runner_for(spec_h).p99_horizon == 7.5
+    # explicit ctor arg overrides (ad-hoc experiments)
+    assert runner_for(spec_h, p99_horizon=9.0).p99_horizon == 9.0
+    # no admission / unset horizon: the 5x-SLO default
+    assert runner_for(None).p99_horizon == 10.0
+    assert runner_for(AdmissionSpec(p99_slo=2.0)).p99_horizon == 10.0

@@ -1,0 +1,221 @@
+"""Replica sync fabric tests: wire-format round trips, the deterministic
+weighted-quantile merge (bit-identical across replicas), delta
+idempotency, policy fingerprint refusal, cold-join bootstrap via the
+state half, and cooldown interplay with the local drift loop."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import CalibrationSpec, RouteSpec, build, policy_fingerprint
+from repro.distributed.replica_sync import (StateDelta, SyncEndpoint,
+                                            delta_nbytes, weighted_quantile)
+from repro.serving.fabric import ReplicaFabric
+
+
+def fleet_spec(**cal_overrides):
+    cal = dict(policy="streaming", target_shares=(0.7, 0.3), window=512,
+               min_samples=64, tolerance=0.08, cooldown=128)
+    cal.update(cal_overrides)
+    return RouteSpec(metric="entropy", thresholds=(6.0,), top_k=100,
+                     tier_names=("qwen7b", "qwen72b"),
+                     calibration=CalibrationSpec(**cal))
+
+
+def skewed_scores(rng, n, skew, k=100):
+    """Descending score rows; skew>1 concentrates mass (harder mix)."""
+    raw = rng.random((n, k)).astype(np.float32) ** skew
+    return -np.sort(-raw, axis=1)
+
+
+# -- weighted_quantile --------------------------------------------------------
+
+def test_weighted_quantile_matches_numpy_on_equal_weights():
+    """Midpoint positions vs numpy's type-7: agreement to O(1/n)."""
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(1001)
+    qs = [0.1, 0.5, 0.9]
+    got = weighted_quantile(v, np.ones_like(v), qs)
+    want = np.quantile(v, qs)
+    np.testing.assert_allclose(got, want, atol=5e-3)
+    # and it is exactly reproducible call-to-call (the real contract)
+    again = weighted_quantile(v.copy(), np.ones_like(v), qs)
+    assert got.tolist() == again.tolist()
+
+
+def test_weighted_quantile_weights_shift_the_cut():
+    v = np.array([0.0, 1.0, 2.0, 3.0])
+    light = weighted_quantile(v, np.array([1.0, 1, 1, 1]), [0.5])[0]
+    heavy = weighted_quantile(v, np.array([1.0, 1, 1, 10]), [0.5])[0]
+    assert heavy > light
+
+
+def test_weighted_quantile_validation():
+    with pytest.raises(ValueError, match="zero samples"):
+        weighted_quantile(np.empty(0), np.empty(0), [0.5])
+    with pytest.raises(ValueError, match="finite"):
+        weighted_quantile(np.ones(3), np.array([1.0, np.nan, 1.0]), [0.5])
+    # all-zero weights fall back to equal weighting, not an error
+    assert weighted_quantile(np.array([1.0, 3.0]), np.zeros(2),
+                             [0.5])[0] == pytest.approx(2.0)
+
+
+# -- wire format --------------------------------------------------------------
+
+def test_delta_json_round_trip_and_compression():
+    session = build(fleet_spec())
+    ep = SyncEndpoint("r0", session)
+    rng = np.random.default_rng(1)
+    session.route(skewed_scores(rng, 300, 1.0))
+    payload = ep.publish()
+    again = StateDelta.from_dict(json.loads(json.dumps(payload)))
+    assert again.replica == "r0" and again.n_samples == 300
+    # int8 block quantization: small absolute error on few-unit values
+    win = session.calibrator.window
+    np.testing.assert_allclose(again.samples(), win.recent(300),
+                               atol=0.05)
+    comp, raw = delta_nbytes(again)
+    assert comp < raw
+
+
+def test_endpoint_requires_streaming_calibrator():
+    session = build(RouteSpec(metric="entropy", thresholds=(6.0,),
+                              top_k=100, tier_names=("qwen7b", "qwen72b")))
+    with pytest.raises(ValueError, match="streaming"):
+        SyncEndpoint("r0", session)
+
+
+def test_receive_refuses_foreign_policy_and_drops_stale():
+    s0, s1 = build(fleet_spec()), build(fleet_spec())
+    e0, e1 = SyncEndpoint("a", s0), SyncEndpoint("b", s1)
+    rng = np.random.default_rng(2)
+    s0.route(skewed_scores(rng, 200, 1.0))
+    payload = e0.publish()
+    e1.receive(payload)
+    assert len(e1.buffers["a"]) == 200
+    e1.receive(payload)                     # replay: dropped idempotently
+    assert len(e1.buffers["a"]) == 200
+    bad = dict(payload, policy_fingerprint="deadbeefdeadbeef")
+    with pytest.raises(ValueError, match="policy fingerprint"):
+        e1.receive(bad)
+
+
+# -- the determinism contract (ISSUE satellite) -------------------------------
+
+def test_identical_interleaved_traffic_gives_identical_merges():
+    """Two independent fleets fed the same interleaved traffic stream
+    end with IDENTICAL merged thresholds — the merge is a function of
+    the payloads, not of replica-local float paths."""
+    def run_fleet():
+        fab = ReplicaFabric()
+        a, b = build(fleet_spec()), build(fleet_spec())
+        fab.add_replica("a", a)
+        fab.add_replica("b", b)
+        rng = np.random.default_rng(42)     # same stream both fleets
+        for step in range(12):
+            a.route(skewed_scores(rng, 48, 0.5))
+            b.route(skewed_scores(rng, 48, 2.5))
+            if step % 4 == 3:
+                fab.sync_round()
+        return a.thresholds, b.thresholds
+
+    (a1, b1), (a2, b2) = run_fleet(), run_fleet()
+    assert a1 == b1                 # within-fleet: merge is fleet-wide
+    assert (a1, b1) == (a2, b2)     # across runs: fully deterministic
+
+
+def test_merge_is_identical_across_replicas_every_round():
+    fab = ReplicaFabric()
+    sessions = {n: build(fleet_spec()) for n in ("a", "b", "c")}
+    for n, s in sessions.items():
+        fab.add_replica(n, s)
+    rng = np.random.default_rng(3)
+    for step in range(9):
+        for i, s in enumerate(sessions.values()):
+            s.route(skewed_scores(rng, 32, 0.5 + i))
+        if step % 3 == 2:
+            rep = fab.sync_round()
+            ths = {tuple(r["thresholds"])
+                   for r in rep["replicas"].values()}
+            assert len(ths) == 1    # one fleet-wide threshold vector
+
+
+# -- fabric membership / bootstrap --------------------------------------------
+
+def test_cold_join_bootstraps_from_state_half_only():
+    fab = ReplicaFabric()
+    a = build(fleet_spec())
+    fab.add_replica("a", a)
+    rng = np.random.default_rng(4)
+    a.route(skewed_scores(rng, 400, 2.0))
+    fab.sync_round()
+    cold = build(fleet_spec())
+    assert cold.thresholds != a.thresholds
+    ep = fab.add_replica("cold", cold, bootstrap_from="a")
+    assert cold.thresholds == a.thresholds
+    assert len(cold.calibrator.window) == len(a.calibrator.window)
+    # inherited window is bootstrap, not publishable traffic
+    assert ep._published_seen == cold.calibrator.window.total_seen
+    payload = ep.publish()
+    assert payload["n_samples"] == 0
+    # ...but the source's replay-buffer view IS inherited, so the
+    # joiner's first merge agrees with the fleet's immediately
+    src = fab.endpoints["a"]
+    assert ep.traffic["a"] == src.traffic["a"]
+    assert len(ep.buffers["a"]) == len(src.buffers["a"])
+    rep = fab.sync_round()
+    ths = {tuple(r["thresholds"]) for r in rep["replicas"].values()}
+    assert len(ths) == 1
+
+
+def test_fabric_refuses_foreign_policy_member():
+    fab = ReplicaFabric()
+    fab.add_replica("a", build(fleet_spec()))
+    other = build(fleet_spec(target_shares=(0.5, 0.5)))
+    with pytest.raises(ValueError, match="polic"):
+        fab.add_replica("b", other)
+    with pytest.raises(ValueError, match="already joined"):
+        fab.add_replica("a", build(fleet_spec()))
+    with pytest.raises(ValueError, match="not a fleet member"):
+        fab.add_replica("c", build(fleet_spec()), bootstrap_from="ghost")
+
+
+def test_fingerprint_is_stable_across_json_round_trip():
+    spec = fleet_spec()
+    again = RouteSpec.from_json(spec.to_json())
+    assert policy_fingerprint(spec) == policy_fingerprint(again)
+    assert policy_fingerprint(spec) \
+        != policy_fingerprint(fleet_spec(target_shares=(0.5, 0.5)))
+
+
+# -- merge / drift-loop interplay ---------------------------------------------
+
+def test_merge_rearms_drift_cooldown():
+    """A merge counts as a swap: the local loop must not immediately
+    refit from its biased window and undo the fleet's thresholds."""
+    fab = ReplicaFabric()
+    a, b = build(fleet_spec()), build(fleet_spec())
+    fab.add_replica("a", a)
+    fab.add_replica("b", b)
+    rng = np.random.default_rng(5)
+    a.route(skewed_scores(rng, 256, 0.3))
+    b.route(skewed_scores(rng, 256, 3.0))
+    fab.sync_round()
+    merged = a.thresholds
+    cal = a.calibrator
+    assert cal._last_swap_at == cal.window.total_seen
+    # one more biased batch within the cooldown: no local counter-swap
+    a.route(skewed_scores(rng, 64, 0.3))
+    assert a.thresholds == merged
+
+
+def test_merge_waits_for_min_samples():
+    fab = ReplicaFabric()
+    a = build(fleet_spec())
+    fab.add_replica("a", a)
+    rng = np.random.default_rng(6)
+    a.route(skewed_scores(rng, 16, 1.0))    # < min_samples=64
+    rep = fab.sync_round()
+    assert rep["replicas"]["a"]["merged"] is False
+    assert a.thresholds == (6.0,)           # untouched

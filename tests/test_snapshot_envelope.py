@@ -1,0 +1,148 @@
+"""Snapshot envelope compat matrix (ISSUE satellite): the versioned
+policy/state envelope, v1-flat backward compatibility behind a warn-once
+shim, state-only restore with loud policy-mismatch refusal, and
+from_snapshot over both layouts."""
+
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (ENVELOPE_VERSION, CalibrationSpec, RouteSpec,
+                       SkewRouteSession, build, policy_fingerprint)
+from repro.serving import _deprecation
+
+
+def mk_spec(**overrides):
+    kw = dict(metric="entropy", thresholds=(6.0,), top_k=50,
+              tier_names=("qwen7b", "qwen72b"),
+              calibration=CalibrationSpec(policy="streaming",
+                                          target_shares=(0.7, 0.3),
+                                          window=256, min_samples=32,
+                                          tolerance=0.08, cooldown=64))
+    kw.update(overrides)
+    return RouteSpec(**kw)
+
+
+def routed_session(spec=None, n=128, seed=0):
+    session = build(spec or mk_spec())
+    rng = np.random.default_rng(seed)
+    scores = -np.sort(-rng.uniform(0.01, 1, (n, 50)).astype(np.float32),
+                      axis=1)
+    session.route(scores)
+    return session
+
+
+def flat_v1_of(envelope: dict) -> dict:
+    """The legacy layout, reconstructed from an envelope: spec + state
+    keys inline (exactly what pre-envelope snapshot() used to emit)."""
+    flat = {"schema_version": 1, "spec": envelope["policy"]}
+    flat.update({k: v for k, v in envelope["state"].items()
+                 if k != "policy_fingerprint"})
+    return flat
+
+
+# -- the envelope contract ----------------------------------------------------
+
+def test_snapshot_is_a_versioned_policy_state_envelope():
+    session = routed_session()
+    snap = session.snapshot()
+    assert snap["envelope_version"] == ENVELOPE_VERSION == 2
+    assert snap["policy"] == session.spec.to_dict()
+    state = snap["state"]
+    assert state["policy_fingerprint"] == policy_fingerprint(session.spec)
+    for key in ("thresholds", "next_id", "stats", "calibrator"):
+        assert key in state
+    # pure JSON all the way down
+    assert json.loads(json.dumps(snap)) == snap
+
+
+def test_envelope_to_envelope_restore_is_bit_exact():
+    session = routed_session()
+    snap = json.loads(json.dumps(session.snapshot()))
+    replica = build(session.spec)
+    replica.restore(snap)
+    assert replica.snapshot() == session.snapshot()
+    assert replica.thresholds == session.thresholds
+
+
+# -- v1 flat backward compat --------------------------------------------------
+
+def test_flat_v1_restores_behind_a_warn_once_shim():
+    session = routed_session()
+    flat = json.loads(json.dumps(flat_v1_of(session.snapshot())))
+    _deprecation.reset()
+    replica = build(session.spec)
+    with pytest.warns(DeprecationWarning, match="flat v1"):
+        replica.restore(flat)
+    assert replica.snapshot() == session.snapshot()
+    # warn-ONCE: a second flat restore is silent
+    replica2 = build(session.spec)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        replica2.restore(flat)
+    assert replica2.thresholds == session.thresholds
+
+
+def test_from_snapshot_accepts_both_layouts():
+    session = routed_session()
+    env = json.loads(json.dumps(session.snapshot()))
+    flat = flat_v1_of(env)
+    _deprecation.reset()
+    with pytest.warns(DeprecationWarning, match="flat v1"):
+        from_flat = SkewRouteSession.from_snapshot(flat)
+    from_env = SkewRouteSession.from_snapshot(env)
+    assert from_env.spec == from_flat.spec == session.spec
+    assert from_env.thresholds == from_flat.thresholds \
+        == session.thresholds
+    with pytest.raises(ValueError, match="no policy half"):
+        SkewRouteSession.from_snapshot({"schema_version": 1})
+
+
+# -- refusal matrix -----------------------------------------------------------
+
+def test_restore_rejects_unknown_versions_and_foreign_policies():
+    session = routed_session()
+    snap = session.snapshot()
+    with pytest.raises(ValueError, match="envelope_version"):
+        session.restore(dict(snap, envelope_version=99))
+    foreign = mk_spec(thresholds=(3.0,))
+    with pytest.raises(ValueError, match="different RouteSpec"):
+        build(foreign).restore(snap)
+    flat = flat_v1_of(snap)
+    _deprecation.reset()
+    with pytest.raises(ValueError, match="different\\s+RouteSpec"):
+        build(foreign).restore(flat)
+    with pytest.raises(ValueError, match="schema_version"):
+        session.restore({"schema_version": 7, "spec": snap["policy"]})
+
+
+def test_restore_state_ships_the_state_half_between_same_policy_peers():
+    session = routed_session()
+    state = json.loads(json.dumps(session.snapshot()["state"]))
+    peer = build(session.spec)
+    peer.restore_state(state)
+    assert peer.thresholds == session.thresholds
+    assert peer.snapshot() == session.snapshot()
+
+
+def test_restore_state_rejects_policy_mismatch_loudly():
+    session = routed_session()
+    state = session.snapshot()["state"]
+    other = build(mk_spec(thresholds=(3.0,)))
+    with pytest.raises(ValueError, match="policy_fingerprint"):
+        other.restore_state(state)
+    # ...including state minted before fingerprints existed
+    unstamped = {k: v for k, v in state.items()
+                 if k != "policy_fingerprint"}
+    with pytest.raises(ValueError, match="policy_fingerprint"):
+        other.restore_state(unstamped)
+
+
+def test_fingerprint_tracks_policy_not_state():
+    spec = mk_spec()
+    assert policy_fingerprint(spec) == policy_fingerprint(mk_spec())
+    tightened = dataclasses.replace(spec, thresholds=(7.0,))
+    assert policy_fingerprint(spec) != policy_fingerprint(tightened)
