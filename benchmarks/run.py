@@ -50,6 +50,11 @@ def main() -> None:
     # -- kernels --------------------------------------------------------------
     rows += kernel_bench.run_all()
 
+    # -- routing-policy frontier (gates asserted inside; full bench with
+    # tracked JSON: python -m benchmarks.policy_frontier_bench) -------------
+    from benchmarks import policy_frontier_bench
+    rows += policy_frontier_bench.csv_rows(quick=args.quick)
+
     rows.append(("total_wall_s", time.monotonic() - t0, ""))
     print("name,value,derived")
     for name, val, derived in rows:

@@ -10,16 +10,33 @@ $/query burns past the budget, and tier-spill engages (with hysteresis)
 while the expensive pool saturates — then everything relaxes as the
 burst passes.
 
-  PYTHONPATH=src python examples/serve_under_load.py
+  PYTHONPATH=src python examples/serve_under_load.py [--policy cascade]
+
+``--policy`` swaps the routing policy (threshold | cascade |
+adaptive_depth | mode_select) via the canonical per-policy spec
+(`repro.serving.loadgen.canonical_policy_spec`) — same trace, same
+pools, different decision economics.
 """
+
+import argparse
 
 from repro.serving.loadgen import canonical_load_runner, canonical_trace
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default=None,
+                    choices=["threshold", "cascade", "adaptive_depth",
+                             "mode_select"],
+                    help="routing policy (default: threshold)")
+    args = ap.parse_args()
     trace = canonical_trace("bursty_drift_saturation")
-    runner = canonical_load_runner(with_admission=True, trace=trace)
+    runner = canonical_load_runner(with_admission=True, trace=trace,
+                                   policy=args.policy)
     session = runner.session
+    if args.policy:
+        print(f"routing policy: {args.policy} "
+              f"({session.spec.policy.to_dict() if session.spec.policy else 'default threshold'})")
     print(f"trace {trace.name!r}: {trace.steps} steps, "
           f"burst x{trace.bursts[0].multiplier:.0f} at step "
           f"{trace.bursts[0].start}, drift at step {trace.drift[1].start}, "
@@ -55,6 +72,9 @@ def main():
           f"{adm['n_tighten']} tighten / {adm['n_relax']} relax actions; "
           f"{s['n_recalibrations']} threshold hot-swaps; "
           f"{s['n_redispatched']} failure re-dispatches")
+    pol = s.get("policy", {})
+    if pol.get("kind", "threshold") != "threshold":
+        print(f"policy telemetry: {pol}")
 
     # the controller's whole trajectory rides in the session snapshot —
     # a replica restored from these bytes resumes mid-spill

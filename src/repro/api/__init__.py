@@ -17,6 +17,12 @@ Policies ship between replicas as bytes (`spec.to_json()` /
 `repro.api.backends`; ``auto`` is the production batch-size crossover
 (oracle below ``spec.crossover_batch``, the fused end-to-end kernels at
 or above it).
+
+What the session DOES with the skew metrics is a registered routing
+policy (``threshold`` | ``cascade`` | ``adaptive_depth`` |
+``mode_select``) selected by ``spec.policy`` — see `repro.policies`;
+``policy=None`` is the default threshold compare, bit-for-bit the
+pre-policy behavior.
 """
 
 from repro.api.backends import (  # noqa: F401
@@ -45,4 +51,14 @@ from repro.api.session import (  # noqa: F401
     EngineBankLike,
     SkewRouteSession,
     build,
+)
+from repro.policies import (  # noqa: F401
+    AdaptiveDepthPolicySpec,
+    CascadePolicySpec,
+    ModeSelectPolicySpec,
+    PolicySpec,
+    ThresholdPolicySpec,
+    available_policies,
+    build_policy,
+    policy_spec_from_dict,
 )

@@ -39,6 +39,13 @@ a column select — never a recompile — regardless of backend.
 Third-party backends (e.g. a mesh-sharded dispatch path, the ROADMAP's
 next step) register with :func:`register_backend` and become selectable
 from a :class:`~repro.api.spec.RouteSpec` by name.
+
+Backends are POLICY-AGNOSTIC: they produce the threshold-tier ids plus
+the raw metric matrix, and the dispatcher's routing policy
+(`repro.policies` — cascade escalation, adaptive retrieval depth, mode
+selection) transforms that decision host-side afterwards. That layering
+is why every policy works identically under every backend, including
+``sharded``.
 """
 
 from __future__ import annotations

@@ -68,9 +68,17 @@ class SkewRouteSession:
         # counters, not the pipeline queues a concurrent submit mutates).
         self._lock = threading.RLock()
         with _deprecation.suppress():
+            # The routing policy (what to DO with the skew metrics):
+            # spec.policy=None builds the default threshold policy —
+            # today's compare, bit-for-bit.
+            from repro.policies import build_policy
+            self.policy = build_policy(
+                spec.policy, n_tiers=spec.n_tiers, tier_models=spec.models(),
+                cost_model=spec.cost_model())
             self.dispatcher = SkewRouteDispatcher(
                 spec.router_config(), spec.models(),
-                cost_model=spec.cost_model(), backend=self.backend)
+                cost_model=spec.cost_model(), backend=self.backend,
+                policy=self.policy)
             cal = spec.calibration
             if cal.policy == "streaming":
                 self.dispatcher.attach_calibrator(
@@ -132,12 +140,19 @@ class SkewRouteSession:
     # -- routing --------------------------------------------------------------
 
     def route(self, scores_desc: np.ndarray,
-              n_valid: Optional[np.ndarray] = None) -> BatchDispatchResult:
+              n_valid: Optional[np.ndarray] = None,
+              self_scores: Optional[np.ndarray] = None
+              ) -> BatchDispatchResult:
         """[B, K] descending top-K scores -> full dispatch result (tiers,
-        difficulty, all four metrics, per-request records)."""
+        difficulty, all four metrics, per-request records).
+
+        ``self_scores``: optional [B] engine self-uncertainty (higher =
+        less confident) that confidence-aware policies (cascade) fold
+        into the decision; ignored by the default threshold policy.
+        """
         return self.dispatcher.dispatch_batch(
             np.atleast_2d(np.asarray(scores_desc)), n_valid=n_valid,
-            return_details=True)
+            return_details=True, self_scores=self_scores)
 
     def route_one(self, scores_desc: np.ndarray,
                   n_valid: Optional[int] = None) -> DispatchRecord:
@@ -165,9 +180,13 @@ class SkewRouteSession:
 
     def submit(self, scores_desc: np.ndarray,
                payloads: Optional[Sequence] = None,
-               n_valid: Optional[np.ndarray] = None) -> BatchDispatchResult:
+               n_valid: Optional[np.ndarray] = None,
+               self_scores: Optional[np.ndarray] = None
+               ) -> BatchDispatchResult:
         """Route a batch and pump full per-tier micro-batches through the
-        tier runners. Requires the session to be built with ``runners=``."""
+        tier runners. Requires the session to be built with ``runners=``.
+        ``self_scores`` feeds confidence-aware policies as in
+        :meth:`route`."""
         if self.pipeline is None:
             raise RuntimeError(
                 "session was built without runners; pass runners= (a "
@@ -176,7 +195,7 @@ class SkewRouteSession:
         with self._lock:
             return self.pipeline.submit(
                 np.atleast_2d(np.asarray(scores_desc)),
-                payloads=payloads, n_valid=n_valid)
+                payloads=payloads, n_valid=n_valid, self_scores=self_scores)
 
     def flush(self) -> int:
         """Drain partial micro-batches; returns requests executed."""
@@ -210,6 +229,7 @@ class SkewRouteSession:
             out["pipeline"] = self.pipeline.stats()
         if self.admission is not None:
             out["admission"] = self.admission.telemetry()
+        out["policy"] = self.policy.telemetry()
         return out
 
     # -- serializable state ---------------------------------------------------
@@ -249,6 +269,10 @@ class SkewRouteSession:
                     "pipeline": None,
                     "admission": (None if self.admission is None
                                   else self.admission.state_dict()),
+                    # None for stateless policies (the default threshold
+                    # policy included), so default-policy envelopes stay
+                    # shape-compatible with pre-policy builds.
+                    "policy_state": d.policy.state_dict(),
                 }
             if self.pipeline is not None:
                 state["pipeline"] = self.pipeline.telemetry.state_dict()
@@ -259,7 +283,7 @@ class SkewRouteSession:
             }
 
     _STATE_KEYS = ("thresholds", "next_id", "stats", "calibrator",
-                   "pipeline", "admission")
+                   "pipeline", "admission", "policy_state")
 
     def _state_of(self, snap: Mapping) -> Mapping:
         """Validate an envelope (or legacy flat v1 snapshot) against this
@@ -350,6 +374,11 @@ class SkewRouteSession:
             if cal_state is not None:
                 d.calibrator.load_state_dict(cal_state)
                 d.router = d.calibrator.config
+            # Absent in pre-policy (PR 8) envelopes and legacy v1 flats:
+            # get() -> None, which every policy accepts as "reset to
+            # spec-initial". A present-but-foreign block refuses loudly
+            # inside load_state_dict.
+            d.policy.load_state_dict(state.get("policy_state"))
         if adm_state is not None:
             self.admission.load_state_dict(adm_state)
         # pipeline presence may legitimately differ (runners are runtime,

@@ -29,6 +29,13 @@ The mesh is ENVIRONMENT, not policy: like interpret-vs-compiled it is
 resolved at construction from the local devices and never serialized —
 a `RouteSpec(backend="sharded")` restored on a 1-device host runs the
 same program on a degenerate mesh and produces the same decisions.
+
+Routing policies (`repro.policies`) compose transparently: the sharded
+program emits the same threshold tiers/difficulty/metrics contract as
+``auto``, and the policy transform (cascade escalation, depth pick,
+mode pricing) runs on the gathered host-side result — so e.g. a
+cascade spec routes bit-for-bit identically under ``sharded`` and
+``auto`` (asserted in tests/test_sharded_backend.py).
 """
 
 from __future__ import annotations

@@ -26,6 +26,7 @@ from typing import Any, Mapping, Optional, Sequence
 from repro.api import backends as _backends
 from repro.core.cost import CostModel
 from repro.core.router import RouterConfig
+from repro.policies import PolicySpec, policy_spec_from_dict
 from repro.serving.admission import AdmissionSpec
 
 SCHEMA_VERSION = 1
@@ -44,6 +45,7 @@ SCHEMA_VERSION = 1
 #:         "calibrator": <StreamingCalibrator.state_dict()> | null,
 #:         "pipeline": <PipelineTelemetry.state_dict()> | null,
 #:         "admission": <AdmissionController.state_dict()> | null,
+#:         "policy_state": <RoutingPolicy.state_dict()> | null,
 #:       },
 #:     }
 #:
@@ -211,6 +213,13 @@ class RouteSpec:
     # bit-for-bit. (Added with a default, so schema-version-1 payloads
     # without the key still load.)
     admission: Optional[AdmissionSpec] = None
+    # Routing policy: what the session DOES with the skew metrics
+    # (`repro.policies` registry). None selects the default threshold
+    # policy — today's compare, bit-for-bit — and is OMITTED from the
+    # serialized dict so pre-policy payloads, envelopes, and fingerprints
+    # are byte-identical. (Added with a default, so schema-version-1
+    # payloads without the key still load.)
+    policy: Optional[PolicySpec] = None
     schema_version: int = SCHEMA_VERSION
 
     def __post_init__(self):
@@ -268,6 +277,12 @@ class RouteSpec:
             if router.n_tiers < 2:
                 raise ValueError("admission control needs >= 2 tiers "
                                  "(there is nowhere to spill)")
+        if self.policy is not None:
+            if not isinstance(self.policy, PolicySpec):
+                raise TypeError("policy must be a PolicySpec or None")
+            # Cross-field invariants (tier counts, top_k bounds) live on
+            # the policy spec itself.
+            self.policy.validate(self)
 
     # -- derived views --------------------------------------------------------
 
@@ -293,7 +308,7 @@ class RouteSpec:
     # -- serialization --------------------------------------------------------
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "schema_version": self.schema_version,
             "metric": self.metric,
             "thresholds": list(self.thresholds),
@@ -310,6 +325,12 @@ class RouteSpec:
             "admission": (None if self.admission is None
                           else self.admission.to_dict()),
         }
+        # Omitted (not null) when default: keeps pre-policy payloads,
+        # snapshot-envelope policy halves, and policy fingerprints
+        # byte-identical to builds that predate the policy layer.
+        if self.policy is not None:
+            d["policy"] = self.policy.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "RouteSpec":
@@ -345,6 +366,9 @@ class RouteSpec:
         admission = d.get("admission")
         if isinstance(admission, Mapping):
             d["admission"] = AdmissionSpec.from_dict(admission)
+        policy = d.get("policy")
+        if isinstance(policy, Mapping):
+            d["policy"] = policy_spec_from_dict(policy)
         for key in ("thresholds", "tier_names", "tier_models"):
             if d.get(key) is not None:
                 d[key] = tuple(d[key])

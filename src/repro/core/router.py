@@ -174,6 +174,20 @@ def route_binary(scores: jax.Array, config: RouterConfig,
     return route(scores, config, mask) > 0
 
 
+@jax.jit
+def select_depths(difficulty: jax.Array, depth_cutoffs: jax.Array,
+                  depth_options: jax.Array) -> jax.Array:
+    """Route retrieval DEPTH per query: bucket difficulty by ascending
+    cutoffs (the same compare as :func:`route_from_difficulty`) and pick
+    the matching depth option — easy (high-skew) queries take a shallow
+    k, flat distributions the deep one. Cutoffs and options ride along
+    as runtime arrays so depth-policy refits never recompile; jitted so
+    the `adaptive_depth` policy's second routed axis stays a device
+    program next to the decision, not a host loop."""
+    bucket = route_from_difficulty(difficulty, depth_cutoffs)
+    return jnp.take(jnp.asarray(depth_options, jnp.int32), bucket)
+
+
 # -- end-to-end: retrieval scoring -> top-k -> skew -> decision ---------------
 
 _NEG_INF = -1e30  # masks padded/invalid candidates out of top-k

@@ -194,6 +194,16 @@ class StreamingCalibrator:
             ts[i] = max(ts[i], ts[i - 1])
         return dataclasses.replace(self.config, thresholds=tuple(ts))
 
+    def quantile_source(self):
+        """The window as a quantile callable (levels -> values) — the
+        per-policy fit hook: routing policies with their own calibrated
+        cutoffs (cascade escalation, depth buckets) re-fit from the SAME
+        sample set that produced the thresholds, so a threshold hot-swap
+        and its policy refit are consistent by construction. Replica sync
+        passes its merged-fleet quantile instead (see
+        ``distributed.replica_sync``)."""
+        return lambda qs: np.asarray(self.window.quantile(np.asarray(qs)))
+
     # -- the streaming step ---------------------------------------------------
 
     def observe(self, difficulty: np.ndarray) -> Optional[RouterConfig]:

@@ -47,8 +47,8 @@ import numpy as np
 
 from repro.core.streaming_calibrate import SlidingWindow
 
-__all__ = ["StateDelta", "SyncEndpoint", "weighted_quantile",
-           "delta_nbytes"]
+__all__ = ["StateDelta", "SyncEndpoint", "merge_admission",
+           "weighted_quantile", "delta_nbytes"]
 
 
 def _quantize(samples: np.ndarray) -> tuple[list[int], list[float]]:
@@ -91,6 +91,11 @@ class StateDelta:
     q: tuple[int, ...]               # int8 blocks, flattened
     scales: tuple[float, ...]        # per-128-block absmax scales
     thresholds: tuple[float, ...]    # publisher's live thresholds (telemetry)
+    # Admission-controller view (AdmissionController.sync_state():
+    # per-tier pressure/spill, $/query EWMA, target shares, n_seen) —
+    # None for sessions without admission AND on legacy wire payloads
+    # that predate the block, which merge exactly as before.
+    admission: Optional[Mapping] = None
 
     def samples(self) -> np.ndarray:
         if self.n_samples == 0:
@@ -98,7 +103,7 @@ class StateDelta:
         return _dequantize(self.q, self.scales, self.n_samples)
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "replica": self.replica, "seq": self.seq,
             "policy_fingerprint": self.policy_fingerprint,
             "from_seen": self.from_seen, "to_seen": self.to_seen,
@@ -106,16 +111,21 @@ class StateDelta:
             "q": list(self.q), "scales": list(self.scales),
             "thresholds": list(self.thresholds),
         }
+        if self.admission is not None:
+            d["admission"] = dict(self.admission)
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "StateDelta":
+        adm = d.get("admission")  # absent on legacy deltas
         return cls(replica=str(d["replica"]), seq=int(d["seq"]),
                    policy_fingerprint=str(d["policy_fingerprint"]),
                    from_seen=int(d["from_seen"]), to_seen=int(d["to_seen"]),
                    n_samples=int(d["n_samples"]),
                    q=tuple(int(v) for v in d["q"]),
                    scales=tuple(float(s) for s in d["scales"]),
-                   thresholds=tuple(float(t) for t in d["thresholds"]))
+                   thresholds=tuple(float(t) for t in d["thresholds"]),
+                   admission=None if adm is None else dict(adm))
 
 
 def delta_nbytes(delta: StateDelta) -> tuple[int, int]:
@@ -154,6 +164,49 @@ def weighted_quantile(values: np.ndarray, weights: np.ndarray,
     return np.interp(np.asarray(qs, np.float64), pos, v)
 
 
+def merge_admission(views: Sequence[Mapping]) -> dict:
+    """Deterministic fleet-wide admission view from per-replica
+    ``sync_state`` blocks (pass them in a canonical order — the fabric
+    sorts by origin name — and every replica computes the same merge):
+
+    * per-tier **pressure** takes the max (saturation anywhere in the
+      fleet is saturation: the load balancer can route any request to
+      the hot replica's pool) and **spill** ORs — so replicas can't
+      disagree about spill during a burst;
+    * the **$/query EWMA** and **target shares** are traffic-weighted
+      means (by ``n_seen``), shares renormalized — the fleet's realized
+      spend and quantile aim, not the loudest replica's.
+    """
+    if not views:
+        raise ValueError("merge_admission over zero views")
+    tiers = sorted({t for v in views for t in v["tier_pressure"]}, key=int)
+    pressure = {t: max(float(v["tier_pressure"].get(t, 0.0)) for v in views)
+                for t in tiers}
+    spill = {t: any(bool(v["tier_spill"].get(t, False)) for v in views)
+             for t in tiers}
+    weights = np.asarray([max(int(v["n_seen"]), 0) for v in views],
+                         np.float64)
+    if weights.sum() <= 0:
+        weights = np.ones(len(views), np.float64)
+    weights = weights / weights.sum()
+    cpqs = [(w, float(v["cost_per_query"]))
+            for w, v in zip(weights, views) if v["cost_per_query"] is not None]
+    cost = (None if not cpqs
+            else float(sum(w * c for w, c in cpqs)
+                       / sum(w for w, _ in cpqs)))
+    share_mat = np.asarray([[float(s) for s in v["shares"]] for v in views],
+                           np.float64)
+    shares = weights @ share_mat
+    shares = shares / shares.sum()
+    return {
+        "tier_pressure": pressure,
+        "tier_spill": spill,
+        "cost_per_query": cost,
+        "shares": [float(s) for s in shares],
+        "n_seen": int(sum(int(v["n_seen"]) for v in views)),
+    }
+
+
 class SyncEndpoint:
     """One replica's half of the sync fabric: publishes deltas of its own
     calibrator window, replays peers' deltas into per-origin buffers, and
@@ -185,6 +238,9 @@ class SyncEndpoint:
         self._published_seen = cal.window.total_seen
         self.buffers: dict[str, SlidingWindow] = {}
         self.traffic: dict[str, int] = {}  # origin -> lifetime total_seen
+        # origin -> latest admission sync_state block (empty for fleets
+        # without admission control or running legacy peers)
+        self.adm_views: dict[str, dict] = {}
         self.n_merges = 0
         self.bytes_sent = 0
         self.bytes_sent_raw = 0
@@ -209,6 +265,8 @@ class SyncEndpoint:
             mine.load_state_dict(buf.state_dict())
             self.buffers[origin] = mine
         self.traffic.update(src.traffic)
+        self.adm_views.update({o: dict(v)
+                               for o, v in src.adm_views.items()})
 
     # -- publish --------------------------------------------------------------
 
@@ -222,13 +280,16 @@ class SyncEndpoint:
         fresh = min(win.total_seen - self._published_seen, win.capacity)
         samples = win.recent(fresh)
         q, scales = (_quantize(samples) if samples.size else ([], []))
+        admission = getattr(self.session, "admission", None)
         delta = StateDelta(
             replica=self.name, seq=self.seq,
             policy_fingerprint=self.fingerprint,
             from_seen=self._published_seen, to_seen=win.total_seen,
             n_samples=int(samples.size),
             q=tuple(q), scales=tuple(scales),
-            thresholds=tuple(self.session.thresholds))
+            thresholds=tuple(self.session.thresholds),
+            admission=(None if admission is None
+                       else admission.sync_state()))
         self._published_seen = win.total_seen
         self.seq += 1
         comp, raw = delta_nbytes(delta)
@@ -261,6 +322,8 @@ class SyncEndpoint:
         if delta.n_samples:
             buf.push(delta.samples())
         self.traffic[delta.replica] = delta.to_seen
+        if delta.admission is not None:
+            self.adm_views[delta.replica] = dict(delta.admission)
 
     # -- merge ----------------------------------------------------------------
 
@@ -292,14 +355,30 @@ class SyncEndpoint:
         values = np.concatenate(parts)
         if values.size < cal.min_samples:
             return None
+        w = np.concatenate(weights)
+        # Adopt the fleet admission view FIRST (when we run admission and
+        # peers published blocks): pressure/spill max-OR so the fleet
+        # can't disagree about spill mid-burst, and — crucially — the
+        # merged target shares land in calibrator.target_shares BEFORE
+        # the cuts below are taken, so thresholds aim at the fleet's
+        # shares, not this replica's possibly-stale local tightening.
+        admission = getattr(self.session, "admission", None)
+        if apply and admission is not None and self.adm_views:
+            admission.adopt_sync(merge_admission(
+                [self.adm_views[o] for o in sorted(self.adm_views)]))
         cuts = np.cumsum(cal.target_shares)[:-1]
-        ts = [float(t) for t in
-              weighted_quantile(values, np.concatenate(weights), cuts)]
+        ts = [float(t) for t in weighted_quantile(values, w, cuts)]
         for i in range(1, len(ts)):       # ties can collapse; keep ascending
             ts[i] = max(ts[i], ts[i - 1])
         merged = dataclasses.replace(cal.config, thresholds=tuple(ts))
         if apply:
-            self.session.dispatcher.apply_config(merged)
+            # The merged sample union is also the policy-refit quantile
+            # source: replicas holding identical buffers re-fit their
+            # policy cutoffs (cascade escalation, depth buckets) to
+            # identical values in the same round.
+            self.session.dispatcher.apply_config(
+                merged,
+                quantile_source=lambda qs: weighted_quantile(values, w, qs))
             cal._last_swap_at = cal.window.total_seen
             self.n_merges += 1
         return merged

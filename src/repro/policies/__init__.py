@@ -1,0 +1,45 @@
+"""Pluggable routing policies: what to DO with the skew metrics.
+
+Importing this package registers the built-in strategies:
+
+* ``threshold`` (default) — SkewRoute's published compare, bit-for-bit;
+* ``cascade`` — cheap-tier-first with calibrated escalation cutoffs and
+  per-stage cost accounting;
+* ``adaptive_depth`` — per-query top-k retrieval depth as a second
+  routed axis;
+* ``mode_select`` — KG-RAG / no-RAG / long-context execution modes as
+  tier-topology metadata.
+
+See :mod:`repro.policies.base` for the protocol and registry.
+"""
+
+from repro.policies.adaptive_depth import (AdaptiveDepthPolicy,
+                                           AdaptiveDepthPolicySpec)
+from repro.policies.base import (PolicyDecision, PolicySpec, QuantileSource,
+                                 RoutingPolicy, available_policies,
+                                 build_policy, policy_spec_from_dict,
+                                 register_policy)
+from repro.policies.cascade import CascadePolicy, CascadePolicySpec
+from repro.policies.mode_select import (KNOWN_MODES, ModeSelectPolicy,
+                                        ModeSelectPolicySpec)
+from repro.policies.threshold import ThresholdPolicy, ThresholdPolicySpec
+
+__all__ = [
+    "AdaptiveDepthPolicy",
+    "AdaptiveDepthPolicySpec",
+    "CascadePolicy",
+    "CascadePolicySpec",
+    "KNOWN_MODES",
+    "ModeSelectPolicy",
+    "ModeSelectPolicySpec",
+    "PolicyDecision",
+    "PolicySpec",
+    "QuantileSource",
+    "RoutingPolicy",
+    "ThresholdPolicy",
+    "ThresholdPolicySpec",
+    "available_policies",
+    "build_policy",
+    "policy_spec_from_dict",
+    "register_policy",
+]

@@ -1,0 +1,174 @@
+"""Adaptive retrieval depth: route top-k per query, not just the model.
+
+Per "Cost-Aware Query Routing in RAG: Empirical Analysis of Retrieval
+Depth Tradeoffs": a high-skew score distribution means the evidence the
+query needs concentrates in the first few triples — shipping the full
+top-k pads the prompt with noise and tokens. This policy keeps the
+model-tier decision exactly as the thresholds made it and adds a SECOND
+routed axis: each request gets a retrieval depth from
+``depth_options`` (ascending), picked by bucketing difficulty against
+``depth_cutoffs`` — easy (high-skew, low difficulty) queries take the
+shallow option, flat distributions take the deep one.
+
+The depth decision reuses the router's compare, so on the fused
+retrieve-to-decision path it stays inside the one device program
+(`core.router.select_depths` is jitted alongside the decision); the
+host side then truncates the retrieved candidate set to the routed
+depth before it reaches the engine. Per-request cost is re-priced at
+the routed depth via ``CostModel.request_cost(model,
+n_triples=depth)`` — the token-linear prompt pricing the cost model
+already exposes — so the $ ledger and admission budget see the depth
+savings, not the flat full-k price.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro.policies.base import (PolicyDecision, PolicySpec, QuantileSource,
+                                 RoutingPolicy, ascending, register_policy)
+
+__all__ = ["AdaptiveDepthPolicySpec", "AdaptiveDepthPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveDepthPolicySpec(PolicySpec):
+    """``depth_options`` — ascending candidate depths (e.g. ``(25, 50,
+    100)``); the deepest must not exceed ``RouteSpec.top_k`` since the
+    device program only retrieves that many. ``depth_cutoffs`` — initial
+    difficulty cutoffs between consecutive options (``len(options) -
+    1``, ascending). ``depth_quantiles`` — when set, the live cutoffs
+    re-fit to these window quantiles on every threshold hot-swap.
+    """
+
+    kind = "adaptive_depth"
+
+    depth_options: tuple = ()
+    depth_cutoffs: tuple = ()
+    depth_quantiles: Optional[tuple] = None
+
+    def validate(self, route_spec) -> None:
+        opts = [int(k) for k in self.depth_options]
+        if len(opts) < 2:
+            raise ValueError("adaptive_depth needs >= 2 depth_options, got "
+                             f"{self.depth_options}")
+        if opts != sorted(opts) or min(opts) < 1:
+            raise ValueError("depth_options must be ascending positive ints, "
+                             f"got {self.depth_options}")
+        if max(opts) > route_spec.top_k:
+            raise ValueError(
+                f"max depth option {max(opts)} exceeds RouteSpec.top_k="
+                f"{route_spec.top_k}; the device program only retrieves "
+                f"top_k candidates")
+        if len(self.depth_cutoffs) != len(opts) - 1:
+            raise ValueError(
+                f"{len(opts)} depth options need {len(opts) - 1} cutoffs, "
+                f"got {len(self.depth_cutoffs)}")
+        if list(self.depth_cutoffs) != sorted(self.depth_cutoffs):
+            raise ValueError("depth_cutoffs must be ascending, got "
+                             f"{self.depth_cutoffs}")
+        if self.depth_quantiles is not None:
+            if len(self.depth_quantiles) != len(opts) - 1:
+                raise ValueError(
+                    f"need {len(opts) - 1} depth quantiles, got "
+                    f"{len(self.depth_quantiles)}")
+            qs = [float(q) for q in self.depth_quantiles]
+            if qs != sorted(qs) or not all(0.0 < q < 1.0 for q in qs):
+                raise ValueError("depth_quantiles must be ascending in "
+                                 f"(0, 1), got {self.depth_quantiles}")
+
+
+class AdaptiveDepthPolicy(RoutingPolicy):
+
+    def __init__(self, spec, **kwargs):
+        super().__init__(spec, **kwargs)
+        self.depth_options = tuple(int(k) for k in spec.depth_options)
+        self.cutoffs = tuple(float(c) for c in spec.depth_cutoffs)
+        # $ matrix [tier, depth-option]: the tier's model re-priced at
+        # each candidate depth's prompt length.
+        self._depth_cost = np.asarray(
+            [[self.cost_model.request_cost(m, n_triples=k)
+              if m in self.cost_model.cost_per_mtok else 0.0
+              for k in self.depth_options] for m in self.tier_models])
+        self.n_decided = 0
+        self.depth_counts = np.zeros(len(self.depth_options), dtype=np.int64)
+
+    @property
+    def needs_refit(self) -> bool:
+        return self.spec.depth_quantiles is not None
+
+    def decide(self, tiers: np.ndarray, difficulty: np.ndarray,
+               metrics: np.ndarray,
+               self_scores: Optional[np.ndarray] = None) -> PolicyDecision:
+        tiers = np.asarray(tiers)
+        # The depth pick itself runs as the jitted device primitive
+        # (`core.router.select_depths` — cutoffs/options are runtime
+        # arrays, so refits never recompile); it shares the router's
+        # strict-> compare, and the host only sees the [B] int32 depths.
+        from repro.core.router import select_depths
+        depths = np.asarray(select_depths(
+            np.asarray(difficulty, np.float32),
+            np.asarray(self.cutoffs, np.float32),
+            np.asarray(self.depth_options, np.int32)))
+        # Option index back from the depth value (options are ascending),
+        # for the cost matrix and the share counters.
+        bucket = np.searchsorted(self.depth_options, depths).astype(np.int64)
+        cost = self._depth_cost[tiers, bucket]
+        self.n_decided += int(tiers.shape[0])
+        self.depth_counts += np.bincount(bucket,
+                                         minlength=len(self.depth_options))
+        return PolicyDecision(
+            tiers=tiers, request_cost=cost, depths=depths,
+            info={"mean_depth": float(depths.mean()) if depths.size else 0.0})
+
+    def refit(self, quantile_source: QuantileSource) -> None:
+        if self.spec.depth_quantiles is None:
+            return
+        fitted = np.asarray(quantile_source(tuple(self.spec.depth_quantiles)))
+        self.cutoffs = ascending(fitted.tolist())
+
+    def state_dict(self) -> Optional[dict]:
+        return {
+            "kind": self.kind,
+            "cutoffs": list(self.cutoffs),
+            "n_decided": self.n_decided,
+            "depth_counts": [int(c) for c in self.depth_counts],
+        }
+
+    def load_state_dict(self, state: Optional[Mapping]) -> None:
+        if state is None:
+            self.cutoffs = tuple(float(c) for c in self.spec.depth_cutoffs)
+            return
+        if state.get("kind") != self.kind:
+            raise ValueError(
+                f"snapshot policy state is {state.get('kind')!r}, this "
+                f"session runs {self.kind!r}; refusing cross-policy restore")
+        self.cutoffs = tuple(float(c) for c in state["cutoffs"])
+        self.n_decided = int(state.get("n_decided", 0))
+        counts = state.get("depth_counts")
+        if counts is not None:
+            if len(counts) != len(self.depth_options):
+                raise ValueError(
+                    f"snapshot has {len(counts)} depth counters for "
+                    f"{len(self.depth_options)} depth options")
+            self.depth_counts = np.asarray(counts, dtype=np.int64)
+
+    def telemetry(self) -> dict:
+        total = int(self.depth_counts.sum())
+        mean_depth = (float(np.dot(self.depth_counts, self.depth_options))
+                      / total if total else 0.0)
+        return {
+            "kind": self.kind,
+            "cutoffs": list(self.cutoffs),
+            "depth_options": list(self.depth_options),
+            "depth_shares": [(int(c) / total if total else 0.0)
+                             for c in self.depth_counts],
+            "mean_depth": mean_depth,
+            "n_decided": self.n_decided,
+        }
+
+
+register_policy(AdaptiveDepthPolicySpec, AdaptiveDepthPolicy)

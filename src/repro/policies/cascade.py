@@ -1,0 +1,168 @@
+"""Cascade routing: answer cheap first, escalate on low confidence.
+
+RouteLLM-style win-rate-vs-cutoff, adapted to SkewRoute's training-free
+setting: every request is dispatched to tier 0 (the cheapest model)
+first, and escalates stage-by-stage while a confidence signal says the
+current tier will likely lose. Two signals feed escalation:
+
+* the skew-derived **difficulty** score vs. a per-stage *escalation
+  cutoff* — calibrated as window quantiles at ``escalation_quantiles``
+  (the target fraction of traffic that STOPS at or below each stage),
+  re-fit through the same ``apply_config`` hot-swap path as the router
+  thresholds, so the fleet's merged windows converge cascade cutoffs
+  exactly like thresholds;
+* an optional **engine self-score** (higher = less confident) vs. the
+  fixed ``self_score_cutoff`` — a post-hoc observation the pre-hoc skew
+  signal can't see. When provided and above cutoff, the request
+  escalates at least one stage regardless of skew.
+
+Cost accounting is cumulative: a request that ends on tier *t* paid for
+every stage ``0..t`` it attempted, so ``PolicyDecision.request_cost``
+is ``cumsum(tier_cost)[final_tier]`` per request. That per-stage bill
+is what flows into the dispatcher ledger and admission's budget EWMA —
+a cascade only wins the cost-quality frontier when its escalation rate
+is low enough to beat paying the big model's share directly, and the
+accounting makes that visible instead of assuming it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.policies.base import (PolicyDecision, PolicySpec, QuantileSource,
+                                 RoutingPolicy, ascending, bucketize,
+                                 register_policy)
+
+__all__ = ["CascadePolicySpec", "CascadePolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadePolicySpec(PolicySpec):
+    """Spec for cascade escalation over the RouteSpec's tier ladder.
+
+    ``escalation_cutoffs`` — initial per-stage difficulty cutoffs
+    (stage *i* escalates past tier *i* when difficulty > cutoff[i]);
+    length must be ``n_tiers - 1``, ascending. ``escalation_quantiles``
+    — when set, the live cutoffs are re-calibrated to these window
+    quantiles on every threshold hot-swap (same cadence, same sample
+    source as the router thresholds). ``self_score_cutoff`` — when set,
+    a request whose engine self-score exceeds it escalates at least one
+    stage even if skew called it easy.
+    """
+
+    kind = "cascade"
+
+    escalation_cutoffs: tuple = ()
+    escalation_quantiles: Optional[tuple] = None
+    self_score_cutoff: Optional[float] = None
+
+    def validate(self, route_spec) -> None:
+        n_stages = len(route_spec.tier_names) - 1
+        if len(self.escalation_cutoffs) != n_stages:
+            raise ValueError(
+                f"cascade over {len(route_spec.tier_names)} tiers needs "
+                f"{n_stages} escalation cutoffs, got "
+                f"{len(self.escalation_cutoffs)}")
+        if list(self.escalation_cutoffs) != sorted(self.escalation_cutoffs):
+            raise ValueError("escalation_cutoffs must be ascending, got "
+                             f"{self.escalation_cutoffs}")
+        if self.escalation_quantiles is not None:
+            if len(self.escalation_quantiles) != n_stages:
+                raise ValueError(
+                    f"need {n_stages} escalation quantiles, got "
+                    f"{len(self.escalation_quantiles)}")
+            qs = [float(q) for q in self.escalation_quantiles]
+            if qs != sorted(qs) or not all(0.0 < q < 1.0 for q in qs):
+                raise ValueError("escalation_quantiles must be ascending "
+                                 f"in (0, 1), got {self.escalation_quantiles}")
+
+
+class CascadePolicy(RoutingPolicy):
+
+    def __init__(self, spec, **kwargs):
+        super().__init__(spec, **kwargs)
+        # Live cutoffs start at the spec values and drift with refits;
+        # they are the mutable state the snapshot envelope carries.
+        self.cutoffs = tuple(float(c) for c in spec.escalation_cutoffs)
+        # Cumulative $ by final tier: a request ending on tier t paid
+        # for stages 0..t.
+        self._cum_cost = np.cumsum(self.tier_cost)
+        self.n_escalated = 0  # requests that went past tier 0
+        self.n_self_score_bumps = 0  # escalations forced by self-score
+        self.n_decided = 0
+
+    @property
+    def needs_refit(self) -> bool:
+        return self.spec.escalation_quantiles is not None
+
+    def decide(self, tiers: np.ndarray, difficulty: np.ndarray,
+               metrics: np.ndarray,
+               self_scores: Optional[np.ndarray] = None) -> PolicyDecision:
+        diff = np.asarray(difficulty)
+        # The backend's threshold tiers are ignored: a cascade always
+        # starts at tier 0 and the final tier is how many stage cutoffs
+        # the difficulty clears — same strict-> compare as the router.
+        final = bucketize(diff, self.cutoffs)
+        bumps = 0
+        if self_scores is not None and self.spec.self_score_cutoff is not None:
+            scores = np.asarray(self_scores, dtype=np.float64)
+            unsure = scores > float(self.spec.self_score_cutoff)
+            bumps = int(np.sum(unsure & (final == 0)))
+            final = np.where(unsure, np.maximum(final, 1), final)
+        final = final.astype(np.int32)
+        cost = self._cum_cost[final]
+        self.n_decided += int(final.shape[0])
+        self.n_escalated += int(np.sum(final > 0))
+        self.n_self_score_bumps += bumps
+        return PolicyDecision(
+            tiers=final, request_cost=cost,
+            info={"escalated": int(np.sum(final > 0)),
+                  "self_score_bumps": bumps})
+
+    def refit(self, quantile_source: QuantileSource) -> None:
+        if self.spec.escalation_quantiles is None:
+            return
+        fitted = np.asarray(
+            quantile_source(tuple(self.spec.escalation_quantiles)))
+        self.cutoffs = ascending(fitted.tolist())
+
+    def state_dict(self) -> Optional[dict]:
+        return {
+            "kind": self.kind,
+            "cutoffs": list(self.cutoffs),
+            "n_decided": self.n_decided,
+            "n_escalated": self.n_escalated,
+            "n_self_score_bumps": self.n_self_score_bumps,
+        }
+
+    def load_state_dict(self, state: Optional[Mapping]) -> None:
+        if state is None:
+            # Pre-policy snapshot half: reset to spec-initial cutoffs.
+            self.cutoffs = tuple(float(c)
+                                 for c in self.spec.escalation_cutoffs)
+            return
+        if state.get("kind") != self.kind:
+            raise ValueError(
+                f"snapshot policy state is {state.get('kind')!r}, this "
+                f"session runs {self.kind!r}; refusing cross-policy restore")
+        self.cutoffs = tuple(float(c) for c in state["cutoffs"])
+        self.n_decided = int(state.get("n_decided", 0))
+        self.n_escalated = int(state.get("n_escalated", 0))
+        self.n_self_score_bumps = int(state.get("n_self_score_bumps", 0))
+
+    def telemetry(self) -> dict:
+        rate = (self.n_escalated / self.n_decided) if self.n_decided else 0.0
+        return {
+            "kind": self.kind,
+            "cutoffs": list(self.cutoffs),
+            "n_decided": self.n_decided,
+            "n_escalated": self.n_escalated,
+            "escalation_rate": rate,
+            "self_score_bumps": self.n_self_score_bumps,
+        }
+
+
+register_policy(CascadePolicySpec, CascadePolicy)

@@ -1,0 +1,169 @@
+"""Mode selection: route ACROSS retrieval modes, not just model sizes.
+
+Per "Route Before Retrieve" / "RAGRouter" (PAPERS.md): the third routed
+axis is HOW the query is answered, not just by which model. Skew already
+tells us which regime a query is in — a sharply-skewed score
+distribution means the top few triples carry the answer (a no-RAG or
+shallow KG prompt may suffice); a flat distribution means retrieval
+found nothing decisive and the engine should see long context instead
+of a noisy subgraph.
+
+This policy keeps the backend's threshold tiers (the RouteSpec ladder
+is the mode ladder: ``tier_names[i]`` is the MODEL serving tier *i*,
+``modes[i]`` is the RETRIEVAL MODE it runs under) and contributes the
+per-mode economics and topology metadata:
+
+* each mode re-prices its tier's model at the mode's true prompt
+  length — ``no_rag`` pays for the bare question (62 tokens on CWQ),
+  ``kg_rag`` pays the cost model's default retrieval prompt, and
+  ``long_context`` pays ``long_context_tokens`` of stuffed document
+  context — so the $ ledger and admission budget reflect mode choice;
+* ``no_rag`` tiers route retrieval depth 0 (the scheduler still
+  retrieves for SCORING — skew is the routing signal — but ships no
+  triples in the prompt), so `PolicyDecision.depths` truncates the
+  candidate set to nothing for those rows;
+* :meth:`tier_topology` exposes ``{tier: mode}`` metadata the
+  TierScheduler pools and loadgen summaries label themselves with.
+
+Modes come from a closed vocabulary so topology consumers can rely on
+the names; the same mode may back several tiers (e.g. a 3-tier ladder
+``no_rag → kg_rag → long_context`` over two model sizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro.core.cost import TOKENS_BARE_QUESTION
+from repro.policies.base import (PolicyDecision, PolicySpec, RoutingPolicy,
+                                 register_policy)
+
+__all__ = ["ModeSelectPolicySpec", "ModeSelectPolicy", "KNOWN_MODES"]
+
+#: The closed mode vocabulary the TierScheduler/loadgen understand.
+KNOWN_MODES = ("no_rag", "kg_rag", "long_context")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeSelectPolicySpec(PolicySpec):
+    """``modes`` — one mode per RouteSpec tier, drawn from
+    :data:`KNOWN_MODES`. ``long_context_tokens`` — prompt length a
+    ``long_context`` tier is billed at (stuffed-document context instead
+    of retrieved triples)."""
+
+    kind = "mode_select"
+
+    modes: tuple = ()
+    long_context_tokens: int = 8192
+
+    def validate(self, route_spec) -> None:
+        if len(self.modes) != len(route_spec.tier_names):
+            raise ValueError(
+                f"mode_select needs one mode per tier "
+                f"({len(route_spec.tier_names)}), got {len(self.modes)}")
+        unknown = [m for m in self.modes if m not in KNOWN_MODES]
+        if unknown:
+            raise ValueError(f"unknown retrieval modes {unknown}; known: "
+                             f"{list(KNOWN_MODES)}")
+        if self.long_context_tokens < 1:
+            raise ValueError("long_context_tokens must be positive, got "
+                             f"{self.long_context_tokens}")
+
+
+class ModeSelectPolicy(RoutingPolicy):
+
+    def __init__(self, spec, **kwargs):
+        super().__init__(spec, **kwargs)
+        self.modes = tuple(spec.modes)
+        # $ per tier at the tier's MODE prompt length.
+        self._mode_cost = np.asarray(
+            [self._price(m, mode)
+             for m, mode in zip(self.tier_models, self.modes)])
+        # Depth per tier: no_rag ships zero triples; retrieval modes keep
+        # the full routed candidate set (depths stay in int32 like the
+        # device program's k).
+        self._mode_depth = np.asarray(
+            [0 if mode == "no_rag" else -1 for mode in self.modes],
+            dtype=np.int32)
+        self.n_decided = 0
+        self.mode_counts = np.zeros(len(self.modes), dtype=np.int64)
+
+    def _price(self, model: str, mode: str) -> float:
+        if model not in self.cost_model.cost_per_mtok:
+            return 0.0
+        if mode == "no_rag":
+            toks = TOKENS_BARE_QUESTION + self.cost_model.output_tokens
+            return self.cost_model.cost_per_mtok[model] * toks / 1e6
+        if mode == "long_context":
+            toks = (self.spec.long_context_tokens
+                    + self.cost_model.output_tokens)
+            return self.cost_model.cost_per_mtok[model] * toks / 1e6
+        return self.cost_model.request_cost(model)
+
+    def decide(self, tiers: np.ndarray, difficulty: np.ndarray,
+               metrics: np.ndarray,
+               self_scores: Optional[np.ndarray] = None) -> PolicyDecision:
+        tiers = np.asarray(tiers)
+        cost = self._mode_cost[tiers]
+        tier_depth = self._mode_depth[tiers]
+        # -1 marks "full depth" — only surface a depths array when some
+        # row actually truncates, so pure-retrieval topologies keep the
+        # no-depth fast path.
+        depths = None
+        if np.any(tier_depth >= 0):
+            depths = np.where(tier_depth >= 0, tier_depth,
+                              np.iinfo(np.int32).max).astype(np.int32)
+        self.n_decided += int(tiers.shape[0])
+        self.mode_counts += np.bincount(tiers, minlength=len(self.modes))
+        return PolicyDecision(
+            tiers=tiers, request_cost=cost, depths=depths,
+            info={"modes": list(self.modes)})
+
+    def tier_topology(self) -> dict:
+        """Tier -> execution-mode metadata for schedulers and loadgen."""
+        return {
+            "modes": list(self.modes),
+            "tier_models": list(self.tier_models),
+            "prompt_cost_per_request": [float(c) for c in self._mode_cost],
+        }
+
+    def state_dict(self) -> Optional[dict]:
+        return {
+            "kind": self.kind,
+            "n_decided": self.n_decided,
+            "mode_counts": [int(c) for c in self.mode_counts],
+        }
+
+    def load_state_dict(self, state: Optional[Mapping]) -> None:
+        if state is None:
+            self.n_decided = 0
+            self.mode_counts = np.zeros(len(self.modes), dtype=np.int64)
+            return
+        if state.get("kind") != self.kind:
+            raise ValueError(
+                f"snapshot policy state is {state.get('kind')!r}, this "
+                f"session runs {self.kind!r}; refusing cross-policy restore")
+        self.n_decided = int(state.get("n_decided", 0))
+        counts = state.get("mode_counts")
+        if counts is not None:
+            if len(counts) != len(self.modes):
+                raise ValueError(
+                    f"snapshot has {len(counts)} mode counters for "
+                    f"{len(self.modes)} tier modes")
+            self.mode_counts = np.asarray(counts, dtype=np.int64)
+
+    def telemetry(self) -> dict:
+        total = int(self.mode_counts.sum())
+        return {
+            "kind": self.kind,
+            "modes": list(self.modes),
+            "mode_shares": [(int(c) / total if total else 0.0)
+                            for c in self.mode_counts],
+            "n_decided": self.n_decided,
+        }
+
+
+register_policy(ModeSelectPolicySpec, ModeSelectPolicy)

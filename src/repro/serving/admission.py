@@ -349,15 +349,27 @@ class AdmissionController:
             target -= 1
         return target
 
-    def apply(self, tiers: np.ndarray,
-              difficulty: np.ndarray) -> tuple[np.ndarray, int]:
+    def apply(self, tiers: np.ndarray, difficulty: np.ndarray,
+              request_cost: Optional[np.ndarray] = None
+              ) -> tuple[np.ndarray, int]:
         """Demote this batch's marginal top-tier requests while spill is
         engaged; always folds the *executed* mix into the $/query EWMA.
-        Returns (possibly-adjusted tiers, number spilled)."""
+        ``request_cost``: optional per-request $ the routing policy
+        billed at DECISION time (cascade stage bills, depth-priced
+        prompts); its per-request surcharge over the flat tier price
+        survives spill adjustment, so the budget loop sees the policy's
+        true spend. Returns (possibly-adjusted tiers, number spilled).
+        """
         tiers = np.asarray(tiers)
         n = len(tiers)
         if n == 0:
             return tiers, 0
+        # Per-request $ on top of the executed tier's flat price: zero
+        # without a policy bill, so `(tier_cost + 0).mean()` reproduces
+        # the pre-policy EWMA bit-for-bit.
+        extra = 0.0
+        if request_cost is not None:
+            extra = np.asarray(request_cost) - self._tier_cost[tiers]
         spilled = 0
         if self.spill_active:
             cutoff = self.marginal_cutoff()
@@ -370,13 +382,53 @@ class AdmissionController:
                     tiers[marginal] = self.spill_target()
         self.n_seen += n
         self.n_spilled += spilled
-        batch_cost = float(self._tier_cost[tiers].mean())
+        batch_cost = float((self._tier_cost[tiers] + extra).mean())
         if self.cost_per_query is None:
             self.cost_per_query = batch_cost
         else:
             self.cost_per_query += self.spec.pressure_beta * (
                 batch_cost - self.cost_per_query)
         return tiers, spilled
+
+    # -- replica-fabric sync --------------------------------------------------
+
+    def sync_state(self) -> dict:
+        """The admission block a replica publishes in its fabric
+        ``StateDelta``: just enough for the fleet to agree about spill
+        and budget during a burst — per-tier smoothed pressure + spill
+        flags, the $/query EWMA, the (possibly tightened) target shares,
+        and ``n_seen`` as the merge weight. Deliberately NOT the full
+        ``state_dict``: events/tier_load are local history, and counters
+        other than ``n_seen`` don't participate in the merge."""
+        return {
+            "tier_pressure": {str(t): float(p)
+                              for t, p in self.tier_pressure.items()},
+            "tier_spill": {str(t): bool(s)
+                           for t, s in self.tier_spill.items()},
+            "cost_per_query": self.cost_per_query,
+            "shares": list(self.shares),
+            "n_seen": self.n_seen,
+        }
+
+    def adopt_sync(self, merged: Mapping) -> None:
+        """Adopt a deterministically merged fleet admission view (see
+        ``distributed.replica_sync.merge_admission``): pressure/spill/
+        budget/shares become the fleet's, local counters stay local.
+        Setting ``calibrator.target_shares`` keeps the drift loop aimed
+        at the merged shares — the same convergence rule as
+        ``control_step``."""
+        shares = tuple(float(s) for s in merged["shares"])
+        if len(shares) != len(self.shares):
+            raise ValueError(f"merged admission view has {len(shares)} tier "
+                             f"shares, controller has {len(self.shares)}")
+        for t in self.tier_pressure:
+            if str(t) in merged["tier_pressure"]:
+                self.tier_pressure[t] = float(merged["tier_pressure"][str(t)])
+                self.tier_spill[t] = bool(merged["tier_spill"][str(t)])
+        cpq = merged.get("cost_per_query")
+        self.cost_per_query = None if cpq is None else float(cpq)
+        self.shares = shares
+        self.calibrator.target_shares = shares
 
     # -- telemetry / serializable state ---------------------------------------
 

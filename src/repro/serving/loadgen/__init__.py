@@ -27,6 +27,7 @@ from repro.serving.loadgen.runner import (  # noqa: F401
     LoadRunner,
     SimRequest,
     canonical_load_runner,
+    canonical_policy_spec,
     make_pool_runners,
     make_pools,
 )

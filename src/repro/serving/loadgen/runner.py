@@ -103,10 +103,41 @@ def _default_tier_quality(models: Sequence[str]) -> tuple[float, ...]:
         for i, m in enumerate(models))
 
 
+def canonical_policy_spec(policy: Optional[str], top_k: int):
+    """The canonical per-policy :class:`~repro.policies.PolicySpec` used
+    by ``canonical_load_runner`` and the examples' ``--policy`` flags —
+    one tuned configuration per registered strategy so every harness
+    stresses the same thing. ``None``/``"threshold"`` -> ``None`` (the
+    default threshold policy, bit-for-bit pre-policy routing)."""
+    from repro.api import (AdaptiveDepthPolicySpec,  # lazy: keep the
+                           CascadePolicySpec,        # serving -> api
+                           ModeSelectPolicySpec)     # edge soft
+    if policy in (None, "threshold"):
+        return None
+    if policy == "cascade":
+        return CascadePolicySpec(escalation_cutoffs=(6.0,),
+                                 escalation_quantiles=(0.7,))
+    if policy == "adaptive_depth":
+        opts = tuple(sorted({max(1, top_k // 4), max(2, top_k // 2),
+                             top_k}))
+        return AdaptiveDepthPolicySpec(
+            depth_options=opts,
+            depth_cutoffs=tuple(5.0 + 1.5 * i
+                                for i in range(len(opts) - 1)),
+            depth_quantiles=tuple(
+                (i + 1) / len(opts) for i in range(len(opts) - 1)))
+    if policy == "mode_select":
+        return ModeSelectPolicySpec(
+            modes=("no_rag", "kg_rag", "kg_rag"))
+    raise ValueError(f"unknown canonical policy {policy!r}; choose from "
+                     f"(threshold, cascade, adaptive_depth, mode_select)")
+
+
 def canonical_load_runner(with_admission: bool, trace: TraceSpec,
                           slo_latency: float = 1.0,
                           base_token_time: float = 8e-5,
-                          record_every: int = 1) -> "LoadRunner":
+                          record_every: int = 1,
+                          policy: Optional[str] = None) -> "LoadRunner":
     """The tuned serving setup the canonical traces are stressed against
     (shared by benchmarks/load_sim_bench.py, CI, tests, and the example
     so they all measure the same thing):
@@ -120,6 +151,11 @@ def canonical_load_runner(with_admission: bool, trace: TraceSpec,
     * admission (when on): $3e-4/query budget — binding once drift
       pushes traffic up-tier — and queue/p99 SLO pressure with
       hysteresis spill.
+
+    ``policy`` selects a routing policy by canonical name
+    (:func:`canonical_policy_spec`). ``mode_select`` routes a THREE-tier
+    topology (no-RAG qwen7b / KG-RAG qwen14b / KG-RAG qwen72b) with a
+    mid-sized middle pool; every other policy keeps the 2-tier setup.
     """
     from repro.api import (AdmissionSpec, CalibrationSpec,  # lazy: keep
                            RouteSpec, build)  # serving -> api edge soft
@@ -128,15 +164,28 @@ def canonical_load_runner(with_admission: bool, trace: TraceSpec,
         p99_horizon=5.0 * slo_latency,  # explicit: serializes with policy
         queue_depth_slo=24, control_interval=32,
         spill_on=1.0, spill_off=0.5) if with_admission else None
+    policy_spec = canonical_policy_spec(policy, trace.top_k)
+    if policy == "mode_select":
+        tier_names = ("qwen7b", "qwen14b", "qwen72b")
+        thresholds = (5.0, 6.5)
+        target_shares = (0.4, 0.35, 0.25)
+        speeds = {0: [2.0] * 8, 1: [1.0] * 4, 2: [0.5] * 3}
+        slots = {0: 32, 1: 16, 2: 8}
+    else:
+        tier_names = ("qwen7b", "qwen72b")
+        thresholds = (6.0,)
+        target_shares = (0.7, 0.3)
+        speeds = {0: [2.0] * 8, 1: [0.5] * 3}
+        slots = {0: 32, 1: 8}
     spec = RouteSpec(
-        metric="entropy", thresholds=(6.0,), top_k=trace.top_k,
-        tier_names=("qwen7b", "qwen72b"),
+        metric="entropy", thresholds=thresholds, top_k=trace.top_k,
+        tier_names=tier_names,
         calibration=CalibrationSpec(
-            policy="streaming", target_shares=(0.7, 0.3), window=512,
+            policy="streaming", target_shares=target_shares, window=512,
             min_samples=64, tolerance=0.08, cooldown=128),
-        admission=admission)
-    pools = make_pools({0: [2.0] * 8, 1: [0.5] * 3},
-                       batch_slots={0: 32, 1: 8},
+        admission=admission,
+        policy=policy_spec)
+    pools = make_pools(speeds, batch_slots=slots,
                        base_token_time=base_token_time)
     session = build(spec, runners=make_pool_runners(pools))
     return LoadRunner(session, pools, slo_latency=slo_latency,
@@ -318,4 +367,7 @@ class LoadRunner:
         }
         if adm is not None:
             summary["admission"] = adm.telemetry()
+        policy = getattr(self.session, "policy", None)
+        if policy is not None:
+            summary["policy"] = policy.telemetry()
         return summary

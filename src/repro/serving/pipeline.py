@@ -146,12 +146,16 @@ class ServingPipeline:
 
     def submit(self, scores_desc: np.ndarray,
                payloads: Optional[Sequence] = None,
-               n_valid: Optional[np.ndarray] = None) -> BatchDispatchResult:
+               n_valid: Optional[np.ndarray] = None,
+               self_scores: Optional[np.ndarray] = None
+               ) -> BatchDispatchResult:
         """Dispatch a request batch and pump full micro-batches.
 
         ``scores_desc``: [B, K] descending top-K retrieval scores.
         ``payloads``: per-request items handed to the tier runner (prompt
         token arrays in production); defaults to the dispatch records.
+        ``self_scores``: optional [B] engine self-uncertainty feeding
+        confidence-aware routing policies (cascade).
         Returns the dispatch result (tiers, difficulty, all four metrics,
         whether a drift hot-swap fired). With an admission controller
         attached, requests execute on ``admission.apply``'s possibly
@@ -163,15 +167,20 @@ class ServingPipeline:
             raise ValueError(f"{scores.shape[0]} score rows but "
                              f"{len(payloads)} payloads")
         res: BatchDispatchResult = self.dispatcher.dispatch_batch(
-            scores, n_valid=n_valid, return_details=True)
+            scores, n_valid=n_valid, return_details=True,
+            self_scores=self_scores)
         exec_tiers = res.tiers
         if self.admission is not None:
             new_config = self.admission.control_step()
             if new_config is not None:
                 self.dispatcher.apply_config(new_config)
                 self.telemetry.n_recalibrations += 1
-            exec_tiers, n_spilled = self.admission.apply(res.tiers,
-                                                         res.difficulty)
+            # request_cost (when the policy priced per request — cascade
+            # stage bills, depth-priced prompts) flows into the budget
+            # EWMA so admission reacts to what the decision actually
+            # costs, not the flat per-tier price.
+            exec_tiers, n_spilled = self.admission.apply(
+                res.tiers, res.difficulty, request_cost=res.request_cost)
             self.telemetry.n_spilled += n_spilled
         # per-request records are lazy; only build them when they ARE the
         # payloads — with explicit payloads the tier array is all we need

@@ -69,6 +69,11 @@ class BatchDispatchResult:
     first_id: int = 0
     metric: str = ""
     recalibrated: bool = False
+    # Routing-policy extras (None under the default threshold policy):
+    # per-request $ the decision actually costs (cascades bill every
+    # stage attempted) and per-request retrieval depth.
+    request_cost: Optional[np.ndarray] = None
+    depths: Optional[np.ndarray] = None
 
     @functools.cached_property
     def records(self) -> list[DispatchRecord]:
@@ -137,7 +142,7 @@ class SkewRouteDispatcher:
     def __init__(self, router: RouterConfig, tier_names: Sequence[str],
                  cost_model: Optional[CostModel] = None,
                  calibrator: Optional[StreamingCalibrator] = None,
-                 backend=None):
+                 backend=None, policy=None):
         _deprecation.warn_once(
             "SkewRouteDispatcher",
             "hand-wiring SkewRouteDispatcher is deprecated; declare the "
@@ -155,6 +160,13 @@ class SkewRouteDispatcher:
         self.tier_names = list(tier_names)
         self.cost_model = cost_model or CostModel()
         self.calibrator = calibrator
+        if policy is None:
+            # lazy import for the same layering reason as the backend
+            from repro.policies import build_policy
+            policy = build_policy(None, n_tiers=router.n_tiers,
+                                  tier_models=tier_names,
+                                  cost_model=self.cost_model)
+        self.policy = policy
         self.stats = DispatcherStats(tier_counts={i: 0 for i in
                                                   range(router.n_tiers)})
         self._lock = threading.Lock()
@@ -169,16 +181,34 @@ class SkewRouteDispatcher:
                                               **knobs)
         return self.calibrator
 
-    def apply_config(self, new_router: RouterConfig) -> None:
+    def apply_config(self, new_router: RouterConfig,
+                     quantile_source=None) -> None:
         """THE threshold hot-swap path — offline recalibration, the
-        streaming drift calibrator, and the admission controller all
-        land here: swap the frozen config, keep the calibrator's view
-        coherent, count it."""
+        streaming drift calibrator, the admission controller, and the
+        replica-sync merge all land here: swap the frozen config, keep
+        the calibrator's view coherent, count it — and re-fit the
+        routing policy's own cutoffs from the same sample set that
+        produced the thresholds (``quantile_source``; defaults to the
+        attached calibrator's window, replica sync passes its merged
+        fleet quantile), so threshold and policy calibration can never
+        diverge."""
         with self._lock:
             self.router = new_router
             self.stats.n_recalibrations += 1
             if self.calibrator is not None:
                 self.calibrator.config = new_router
+            self._refit_policy_locked(quantile_source)
+
+    def _refit_policy_locked(self, quantile_source=None) -> None:
+        """Policy-cutoff refit half of a hot-swap; caller holds the lock."""
+        if not self.policy.needs_refit:
+            return
+        if quantile_source is None:
+            cal = self.calibrator
+            if cal is None or len(cal.window) < cal.min_samples:
+                return  # nothing trustworthy to fit from yet
+            quantile_source = cal.quantile_source()
+        self.policy.refit(quantile_source)
 
     def recalibrate(self, calibration_scores: np.ndarray,
                     tier_shares: Sequence[float]) -> RouterConfig:
@@ -202,13 +232,16 @@ class SkewRouteDispatcher:
 
     def dispatch_batch(self, scores_desc: np.ndarray,
                        n_valid: Optional[np.ndarray] = None,
-                       return_details: bool = False):
+                       return_details: bool = False,
+                       self_scores: Optional[np.ndarray] = None):
         """[B, K] (+ optional [B] n_valid) -> [B] tier ids.
 
         The vectorized fast path: one fused kernel call per bucketed batch
         shape. With ``return_details=True`` returns a
         :class:`BatchDispatchResult` carrying per-request records and the
         full metric matrix (the pipeline and telemetry consumers).
+        ``self_scores``: optional [B] engine self-uncertainty (higher =
+        less confident) some policies (cascade) fold into the decision.
         """
         scores = np.asarray(scores_desc)
         b, k = scores.shape
@@ -228,13 +261,18 @@ class SkewRouteDispatcher:
         diff = np.asarray(result.difficulty)[:b]
         metrics = np.asarray(result.metrics)[:b]
 
-        first_id, metric_name, recalibrated = self._record_batch(tiers, diff)
+        decision = self.policy.decide(tiers, diff, metrics,
+                                      self_scores=self_scores)
+        first_id, metric_name, recalibrated = self._record_batch(
+            decision.tiers, diff, decision)
         if not return_details:
-            return tiers
-        return BatchDispatchResult(tiers=tiers, difficulty=diff,
+            return decision.tiers
+        return BatchDispatchResult(tiers=decision.tiers, difficulty=diff,
                                    metrics=metrics, first_id=first_id,
                                    metric=metric_name,
-                                   recalibrated=recalibrated)
+                                   recalibrated=recalibrated,
+                                   request_cost=decision.request_cost,
+                                   depths=decision.depths)
 
     def dispatch_retrieved(self, feats: np.ndarray, query_emb: np.ndarray,
                            scorer_params, n_cand: Optional[np.ndarray] = None
@@ -273,18 +311,33 @@ class SkewRouteDispatcher:
             self.router, n_cand=jnp.asarray(nc))
         tiers = np.asarray(res.tiers)[:b]
         diff = np.asarray(res.difficulty)[:b]
-        first_id, metric_name, recalibrated = self._record_batch(tiers, diff)
+        metrics = np.asarray(res.metrics)[:b]
+        decision = self.policy.decide(tiers, diff, metrics)
+        first_id, metric_name, recalibrated = self._record_batch(
+            decision.tiers, diff, decision)
+        nv_out = np.asarray(res.n_valid)[:b]
+        probs = np.asarray(res.probs)[:b]
+        if decision.depths is not None:
+            # Depth-routing: the candidate set each request SHIPS is the
+            # routed depth — shrink the valid prefix and zero the probs
+            # past it so downstream consumers can't read truncated rows.
+            nv_out = np.minimum(nv_out, decision.depths).astype(np.int32)
+            probs = np.where(
+                np.arange(probs.shape[1])[None, :] < nv_out[:, None],
+                probs, 0.0).astype(probs.dtype)
         return RetrievedDispatchResult(
             result=BatchDispatchResult(
-                tiers=tiers, difficulty=diff,
-                metrics=np.asarray(res.metrics)[:b], first_id=first_id,
-                metric=metric_name, recalibrated=recalibrated),
+                tiers=decision.tiers, difficulty=diff,
+                metrics=metrics, first_id=first_id,
+                metric=metric_name, recalibrated=recalibrated,
+                request_cost=decision.request_cost,
+                depths=decision.depths),
             indices=np.asarray(res.indices)[:b],
-            probs=np.asarray(res.probs)[:b],
-            n_valid=np.asarray(res.n_valid)[:b])
+            probs=probs,
+            n_valid=nv_out)
 
-    def _record_batch(self, tiers: np.ndarray,
-                      diff: np.ndarray) -> tuple[int, str, bool]:
+    def _record_batch(self, tiers: np.ndarray, diff: np.ndarray,
+                      decision=None) -> tuple[int, str, bool]:
         """The control-plane half shared by every dispatch entry: request
         ids, tier/cost/difficulty counters, drift-aware recalibration."""
         b = len(tiers)
@@ -300,18 +353,31 @@ class SkewRouteDispatcher:
             self.stats.mean_difficulty = (
                 (self.stats.mean_difficulty * total + float(diff.sum()))
                 / max(self.stats.n_requests, 1))
-            for t, c in enumerate(counts):
-                if not c:
-                    continue
-                self.stats.tier_counts[t] += int(c)
-                name = self.tier_names[t]
-                if name in self.cost_model.cost_per_mtok:
-                    self.stats.total_cost += (
-                        self.cost_model.request_cost(name) * int(c))
+            if decision is not None and decision.request_cost is not None:
+                # The policy priced each request itself (per-stage cascade
+                # bills, per-depth prompt lengths) — the ledger takes the
+                # decision's word over the flat per-tier price.
+                self.stats.total_cost += float(decision.request_cost.sum())
+                for t, c in enumerate(counts):
+                    if c:
+                        self.stats.tier_counts[t] += int(c)
+            else:
+                for t, c in enumerate(counts):
+                    if not c:
+                        continue
+                    self.stats.tier_counts[t] += int(c)
+                    name = self.tier_names[t]
+                    if name in self.cost_model.cost_per_mtok:
+                        self.stats.total_cost += (
+                            self.cost_model.request_cost(name) * int(c))
             if self.calibrator is not None:
                 new_config = self.calibrator.observe(diff)
                 if new_config is not None:
                     self.router = new_config
                     self.stats.n_recalibrations += 1
                     recalibrated = True
+                    # An inline drift swap re-fits the policy from the
+                    # window that produced the new thresholds (same rule
+                    # as apply_config; we already hold the lock).
+                    self._refit_policy_locked()
         return first_id, metric_name, recalibrated

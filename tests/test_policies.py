@@ -1,0 +1,319 @@
+"""Routing-policy subsystem tests: the registry contract, per-policy
+decision semantics, spec JSON round-trips, snapshot/restore and fabric
+round-trips of every PolicySpec (cross-policy restore refuses loudly,
+pre-policy envelopes restore unchanged), calibration convergence through
+the hot-swap path, and the default-spec bit-for-bit parity guarantee
+across every registered difficulty backend."""
+
+import json
+
+import numpy as np
+import numpy.testing as npt
+import pytest
+
+from repro.api import (AdaptiveDepthPolicySpec, CalibrationSpec,
+                       CascadePolicySpec, ModeSelectPolicySpec, RouteSpec,
+                       SkewRouteSession, ThresholdPolicySpec,
+                       available_policies, build, build_policy,
+                       policy_fingerprint, policy_spec_from_dict)
+
+
+def desc_scores(b, k=50, seed=0, skew=1.0):
+    rng = np.random.default_rng(seed)
+    raw = rng.uniform(0.01, 1, (b, k)).astype(np.float32) ** skew
+    return -np.sort(-raw, axis=1)
+
+
+def mk_spec(**overrides):
+    kw = dict(metric="entropy", thresholds=(6.0,), top_k=50,
+              tier_names=("qwen7b", "qwen72b"),
+              calibration=CalibrationSpec(policy="streaming",
+                                          target_shares=(0.7, 0.3),
+                                          window=256, min_samples=32,
+                                          tolerance=0.08, cooldown=64))
+    kw.update(overrides)
+    return RouteSpec(**kw)
+
+
+ALL_POLICY_SPECS = [
+    ThresholdPolicySpec(),
+    CascadePolicySpec(escalation_cutoffs=(6.2,),
+                      escalation_quantiles=(0.8,),
+                      self_score_cutoff=0.7),
+    AdaptiveDepthPolicySpec(depth_options=(12, 25, 50),
+                            depth_cutoffs=(5.5, 6.2),
+                            depth_quantiles=(0.5, 0.8)),
+    ModeSelectPolicySpec(modes=("no_rag", "kg_rag")),
+]
+
+
+def spec_for(policy_spec):
+    return mk_spec(policy=policy_spec)
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_registry_lists_all_strategies():
+    assert set(available_policies()) >= {"threshold", "cascade",
+                                         "adaptive_depth", "mode_select"}
+
+
+def test_spec_from_dict_round_trips_and_rejects_unknowns():
+    for ps in ALL_POLICY_SPECS:
+        d = json.loads(json.dumps(ps.to_dict()))
+        again = policy_spec_from_dict(d)
+        assert again == ps
+    with pytest.raises(ValueError, match="unknown routing policy"):
+        policy_spec_from_dict({"kind": "nope"})
+    with pytest.raises(ValueError, match="unknown"):
+        policy_spec_from_dict({"kind": "cascade", "bogus_field": 1})
+
+
+def test_build_policy_none_is_threshold():
+    p = build_policy(None, n_tiers=2, tier_models=("qwen7b", "qwen72b"),
+                     cost_model=mk_spec().cost_model())
+    assert p.spec == ThresholdPolicySpec()
+
+
+def test_route_spec_policy_validation():
+    with pytest.raises(TypeError, match="PolicySpec"):
+        mk_spec(policy="cascade")
+    with pytest.raises(ValueError):
+        # 2 tiers need exactly 1 escalation cutoff
+        mk_spec(policy=CascadePolicySpec(escalation_cutoffs=(1.0, 2.0)))
+    with pytest.raises(ValueError):
+        # depth options must not exceed top_k
+        mk_spec(policy=AdaptiveDepthPolicySpec(depth_options=(25, 999),
+                                               depth_cutoffs=(6.0,)))
+    with pytest.raises(ValueError):
+        # one mode per tier
+        mk_spec(policy=ModeSelectPolicySpec(modes=("kg_rag",)))
+
+
+def test_route_spec_omits_policy_when_default():
+    d = mk_spec().to_dict()
+    assert "policy" not in d      # pre-policy payload compatibility
+    spec = mk_spec(policy=CascadePolicySpec(escalation_cutoffs=(6.0,)))
+    assert spec.to_dict()["policy"]["kind"] == "cascade"
+    assert RouteSpec.from_json(spec.to_json()) == spec
+
+
+def test_fingerprint_tracks_policy():
+    fps = {policy_fingerprint(spec_for(ps)) for ps in ALL_POLICY_SPECS}
+    assert len(fps) == len(ALL_POLICY_SPECS)
+    # explicit threshold spec == default (both route bit-for-bit alike)
+    assert policy_fingerprint(mk_spec()) != policy_fingerprint(
+        spec_for(CascadePolicySpec(escalation_cutoffs=(6.0,))))
+
+
+# -- decision semantics -------------------------------------------------------
+
+def test_default_policy_is_bit_for_bit_pre_policy():
+    scores = desc_scores(128, seed=1)
+    plain, explicit = build(mk_spec()), build(
+        spec_for(ThresholdPolicySpec()))
+    rp, re = plain.route(scores), explicit.route(scores)
+    npt.assert_array_equal(np.asarray(rp.tiers), np.asarray(re.tiers))
+    assert rp.request_cost is None and re.request_cost is None
+    assert rp.depths is None
+    assert plain.stats.total_cost == explicit.stats.total_cost
+
+
+def test_cascade_escalates_on_difficulty_or_self_score():
+    session = build(spec_for(CascadePolicySpec(
+        escalation_cutoffs=(6.0,), self_score_cutoff=0.8)))
+    scores = desc_scores(64, seed=2)
+    diff = np.asarray(session.route(scores).difficulty)
+    # force one easy row to escalate on self-score alone
+    ss = np.zeros(64, np.float32)
+    easy = int(np.argmin(diff))
+    ss[easy] = 0.99
+    res = build(spec_for(CascadePolicySpec(
+        escalation_cutoffs=(6.0,), self_score_cutoff=0.8))).route(
+            scores, self_scores=ss)
+    tiers = np.asarray(res.tiers)
+    npt.assert_array_equal(tiers[easy], 1)
+    npt.assert_array_equal(tiers[ss == 0], (diff[ss == 0] > 6.0))
+    # escalated rows pay BOTH stages
+    cm = session.spec.cost_model()
+    c0, c1 = (cm.request_cost(m) for m in session.spec.models())
+    cost = np.asarray(res.request_cost)
+    npt.assert_allclose(cost[tiers == 1], c0 + c1)
+    npt.assert_allclose(cost[tiers == 0], c0)
+
+
+def test_adaptive_depth_truncates_and_prices_by_depth():
+    session = build(spec_for(AdaptiveDepthPolicySpec(
+        depth_options=(12, 25, 50), depth_cutoffs=(5.5, 6.2))))
+    res = session.route(desc_scores(64, seed=3))
+    depths = np.asarray(res.depths)
+    assert set(np.unique(depths)) <= {12, 25, 50}
+    diff = np.asarray(res.difficulty)
+    npt.assert_array_equal(depths[diff <= 5.5], 12)
+    npt.assert_array_equal(depths[diff > 6.2], 50)
+    # deeper retrieval costs strictly more at the same tier
+    cm = session.spec.cost_model()
+    tiers = np.asarray(res.tiers)
+    cost = np.asarray(res.request_cost)
+    for t in np.unique(tiers):
+        m = session.spec.models()[t]
+        for d in np.unique(depths[tiers == t]):
+            npt.assert_allclose(cost[(tiers == t) & (depths == d)],
+                                cm.request_cost(m, n_triples=int(d)))
+
+
+def test_mode_select_prices_modes_and_reports_topology():
+    session = build(spec_for(ModeSelectPolicySpec(
+        modes=("no_rag", "kg_rag"))))
+    res = session.route(desc_scores(64, seed=4))
+    tiers = np.asarray(res.tiers)
+    cost = np.asarray(res.request_cost)
+    cm = session.spec.cost_model()
+    # the no-RAG tier prices the bare question, far below KG-RAG prompts
+    if (tiers == 0).any() and (tiers == 1).any():
+        assert cost[tiers == 0].max() < cost[tiers == 1].min()
+    topo = session.policy.tier_topology()
+    assert tuple(topo["modes"]) == ("no_rag", "kg_rag")
+    assert len(topo["prompt_cost_per_request"]) == 2
+    assert cm.request_cost("qwen72b") == pytest.approx(
+        topo["prompt_cost_per_request"][1])
+
+
+# -- snapshot round-trips -----------------------------------------------------
+
+@pytest.mark.parametrize("ps", ALL_POLICY_SPECS,
+                         ids=lambda p: p.kind)
+def test_snapshot_restore_round_trips_every_policy(ps):
+    spec = spec_for(ps)
+    session = build(spec)
+    session.route(desc_scores(96, seed=5),
+                  self_scores=np.random.default_rng(5).uniform(0, 1, 96)
+                  .astype(np.float32) if ps.kind == "cascade" else None)
+    snap = json.loads(json.dumps(session.snapshot()))
+    replica = SkewRouteSession.from_snapshot(snap)
+    assert replica.policy.telemetry() == session.policy.telemetry()
+    assert replica.policy.state_dict() == session.policy.state_dict()
+    scores = desc_scores(32, seed=6)
+    ra, rb = session.route(scores), replica.route(scores)
+    npt.assert_array_equal(np.asarray(ra.tiers), np.asarray(rb.tiers))
+
+
+def test_cross_policy_restore_refuses_loudly():
+    casc = build(spec_for(CascadePolicySpec(escalation_cutoffs=(6.0,))))
+    casc.route(desc_scores(64, seed=7))
+    snap = casc.snapshot()
+    depth = build(spec_for(AdaptiveDepthPolicySpec(
+        depth_options=(25, 50), depth_cutoffs=(6.0,))))
+    # envelope-level refusal: different spec entirely
+    with pytest.raises(ValueError, match="different RouteSpec"):
+        depth.restore(snap)
+    # state-level refusal: a foreign policy_state block, even if someone
+    # bypasses the envelope check
+    with pytest.raises(ValueError, match="refusing cross-policy"):
+        depth.policy.load_state_dict(snap["state"]["policy_state"])
+
+
+def test_pre_policy_envelope_restores_under_default_policy():
+    """A v2 envelope minted BEFORE the policy subsystem existed has no
+    'policy_state' key (and no 'policy' in its spec dict): it must
+    restore unchanged into a default-threshold session."""
+    session = build(mk_spec())
+    session.route(desc_scores(64, seed=8))
+    snap = session.snapshot()
+    assert "policy" not in snap["policy"]    # spec dict omits the key
+    del snap["state"]["policy_state"]        # pre-policy envelope shape
+    replica = build(mk_spec())
+    replica.restore(snap)
+    scores = desc_scores(32, seed=9)
+    npt.assert_array_equal(np.asarray(session.route(scores).tiers),
+                           np.asarray(replica.route(scores).tiers))
+
+
+def test_stateful_policy_state_survives_snapshot():
+    spec = spec_for(CascadePolicySpec(escalation_cutoffs=(6.0,),
+                                      escalation_quantiles=(0.8,)))
+    session = build(spec)
+    session.route(desc_scores(200, seed=10))
+    # trigger a hot-swap so the cutoff refits away from its spec value
+    session.dispatcher.apply_config(session.dispatcher.router)
+    assert session.policy.cutoffs != (6.0,)
+    snap = session.snapshot()
+    replica = SkewRouteSession.from_snapshot(snap)
+    assert replica.policy.cutoffs == session.policy.cutoffs
+    assert replica.policy.telemetry() == session.policy.telemetry()
+
+
+# -- fabric round-trips -------------------------------------------------------
+
+def fabric_pair(ps):
+    from repro.distributed.replica_sync import SyncEndpoint
+    s0, s1 = build(spec_for(ps)), build(spec_for(ps))
+    return (s0, s1), (SyncEndpoint("r0", s0), SyncEndpoint("r1", s1))
+
+
+@pytest.mark.parametrize("ps", ALL_POLICY_SPECS,
+                         ids=lambda p: p.kind)
+def test_fabric_round_trip_converges_every_policy(ps):
+    """Identical policy specs: a publish/receive/merge round leaves both
+    replicas on identical thresholds AND identical policy cutoffs."""
+    (s0, s1), (e0, e1) = fabric_pair(ps)
+    s0.route(desc_scores(200, seed=11, skew=0.6))
+    s1.route(desc_scores(200, seed=12, skew=2.0))
+    d0, d1 = e0.publish(), e1.publish()
+    e0.receive(json.loads(json.dumps(d1)))
+    e1.receive(json.loads(json.dumps(d0)))
+    m0, m1 = e0.merge(apply=True), e1.merge(apply=True)
+    assert m0.thresholds == m1.thresholds
+    if hasattr(s0.policy, "cutoffs"):
+        assert s0.policy.cutoffs == s1.policy.cutoffs
+
+
+def test_fabric_refuses_mismatched_policy_specs():
+    from repro.distributed.replica_sync import SyncEndpoint
+    s0 = build(spec_for(CascadePolicySpec(escalation_cutoffs=(6.0,))))
+    s1 = build(mk_spec())
+    e0, e1 = SyncEndpoint("r0", s0), SyncEndpoint("r1", s1)
+    s0.route(desc_scores(64, seed=13))
+    with pytest.raises(ValueError, match="fingerprint"):
+        e1.receive(e0.publish())
+
+
+# -- calibration convergence through the hot-swap path ------------------------
+
+def test_hot_swap_refits_policy_cutoffs_from_calibrator_window():
+    spec = spec_for(CascadePolicySpec(escalation_cutoffs=(4.0,),
+                                      escalation_quantiles=(0.8,)))
+    session = build(spec)
+    session.route(desc_scores(256, seed=14))
+    session.dispatcher.apply_config(session.dispatcher.router)
+    cal = session.calibrator
+    want = float(np.asarray(cal.window.quantile(np.asarray([0.8])))[0])
+    assert session.policy.cutoffs == pytest.approx((want,))
+
+
+def test_quantile_free_cascade_never_refits():
+    spec = spec_for(CascadePolicySpec(escalation_cutoffs=(6.0,)))
+    session = build(spec)
+    session.route(desc_scores(256, seed=15))
+    session.dispatcher.apply_config(session.dispatcher.router)
+    assert session.policy.cutoffs == (6.0,)    # static cutoffs stay put
+
+
+# -- backend parity -----------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["oracle", "auto", "fused", "sharded"])
+def test_default_spec_routes_identically_across_backends(backend):
+    """The acceptance guarantee: a default RouteSpec (no policy=) routes
+    bit-for-bit identically under every registered backend."""
+    scores = desc_scores(128, seed=16)
+    ref = build(mk_spec(backend="auto")).route(scores)
+    got = build(mk_spec(backend=backend)).route(scores)
+    npt.assert_array_equal(np.asarray(ref.tiers), np.asarray(got.tiers))
+    if backend == "oracle":
+        # the NumPy reference matches the fused kernel to float rounding
+        npt.assert_allclose(np.asarray(ref.metrics),
+                            np.asarray(got.metrics), rtol=1e-5)
+    else:
+        npt.assert_array_equal(np.asarray(ref.metrics),
+                               np.asarray(got.metrics))
+    assert got.request_cost is None and got.depths is None

@@ -125,6 +125,29 @@ def test_session_level_parity_and_snapshot():
     assert [r.tier for r in rr.records] == [r.tier for r in rs.records]
 
 
+def test_cascade_policy_parity_under_sharded():
+    """The cascade policy composes transparently with the sharded
+    backend: decisions (and per-request escalation costs) match the
+    auto backend bit-for-bit — the policy transforms the SAME [B, 4]
+    metric matrix host-side regardless of how it was computed."""
+    from repro.api import CascadePolicySpec
+    scores = desc_scores(256, 100, seed=11)
+    rng = np.random.default_rng(11)
+    self_scores = rng.uniform(0, 1, 256).astype(np.float32)
+    mk = lambda be: RouteSpec(
+        metric="entropy", thresholds=(4.0,), top_k=100,
+        tier_names=("qwen7b", "qwen72b"), backend=be,
+        policy=CascadePolicySpec(escalation_cutoffs=(5.0,),
+                                 self_score_cutoff=0.8))
+    s_auto, s_shard = build(mk("auto")), build(mk("sharded"))
+    ra = s_auto.route(scores, self_scores=self_scores)
+    rs = s_shard.route(scores, self_scores=self_scores)
+    npt.assert_array_equal(np.asarray(ra.tiers), np.asarray(rs.tiers))
+    npt.assert_array_equal(np.asarray(ra.request_cost),
+                           np.asarray(rs.request_cost))
+    assert s_auto.policy.telemetry() == s_shard.policy.telemetry()
+
+
 # -- padding math -------------------------------------------------------------
 
 def test_per_shard_bucket_padding():
