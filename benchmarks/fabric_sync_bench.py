@@ -201,6 +201,28 @@ def check_gates(out: dict) -> dict:
     return gates
 
 
+def csv_rows(quick: bool = True) -> list[tuple]:
+    """``benchmarks.run`` harness entry: fleet convergence on the smoke
+    trace (full canonical trace when ``quick=False``), gates asserted
+    inside."""
+    trace = canonical_trace(SMOKE_TRACE if quick else DEFAULT_TRACE)
+    out = run_fleets(trace, fleet_spec(trace), SYNC_EVERY)
+    gates = check_gates(out)
+    return [
+        ("fabric_sync/sync_spread", round(gates["sync_spread_final"], 4),
+         f"expensive-share spread, synced fleet (gate <= {SPREAD_GATE})"),
+        ("fabric_sync/nosync_spread",
+         round(gates["nosync_spread_final"], 4),
+         "same fleet, no exchange (gated > sync_spread)"),
+        ("fabric_sync/cold_rounds_to_converge",
+         gates["cold_rounds_to_converge"],
+         f"mid-run joiner (bound {COLD_ROUND_BOUND})"),
+        ("fabric_sync/compression_ratio",
+         round(gates["compression_ratio"], 2),
+         "raw f32 wire bytes / int8 delta bytes"),
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",

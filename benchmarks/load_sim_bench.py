@@ -133,6 +133,30 @@ def runner_decisions(runner) -> dict:
             for t, c in runner.session.stats.tier_counts.items()}
 
 
+def csv_rows(quick: bool = True) -> list[tuple]:
+    """``benchmarks.run`` harness entry: the admission-on/off pair on
+    the smoke trace (full canonical trace when ``quick=False``), gates
+    asserted inside."""
+    pair = run_pair(SMOKE_TRACE if quick else DEFAULT_TRACE,
+                    record_every=5)
+    gates = check_gates(pair)
+    rows: list[tuple] = []
+    for label in ("baseline", "admission"):
+        s = pair[label]["report"].summary
+        tag = f"load_sim/{label}"
+        rows.append((f"{tag}/slo_attainment", round(s["slo_attainment"], 4),
+                     "completed within SLO / arrivals"))
+        rows.append((f"{tag}/cost_per_query",
+                     round(s["cost_per_query"], 8),
+                     "$ over the executed tier mix"))
+        rows.append((f"{tag}/n_spilled", s["n_spilled"],
+                     "admission tier-spill demotions"))
+    rows.append(("load_sim/slo_attainment_delta",
+                 round(gates["slo_attainment_delta"], 4),
+                 "admission - baseline (gated > 0)"))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",

@@ -40,6 +40,10 @@ Acceptance gates (asserted when the full grid runs with the default
   interpret mode they measured).
 * headline: batched dispatch >= 5x the per-request oracle at
   B=1024, K=100.
+* observability: a session with metrics + tracing ENABLED must route
+  within ``OBS_OVERHEAD_MAX_RATIO`` (5%) of an obs-less session at the
+  headline shape — the plane's batch-granular design is a perf contract,
+  not an aspiration.
 
   PYTHONPATH=src python -m benchmarks.routing_fastpath_bench [--smoke]
 """
@@ -69,6 +73,11 @@ GATE_SHAPE = (1024, 100)  # B, K of the headline acceptance assertion
 GATE_SPEEDUP = 5.0
 PER_CELL_SPEEDUP = 1.0    # every cell, both sections: never lose to
                           # per-request dispatch (the B=1 regression gate)
+# Observability gate: a session with metrics + tracing ENABLED must
+# dispatch within this factor of an obs-less session at the headline
+# shape — the plane is batch-granular by design, so turning it on may
+# not tax the fast path.
+OBS_OVERHEAD_MAX_RATIO = 1.05
 DEFAULT_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_routing_fastpath.json"
 
@@ -201,6 +210,45 @@ def bench_e2e_shape(b: int, n: int, k: int, config: RouterConfig, backend,
     }
 
 
+def bench_obs_overhead(b: int, k: int, metric: str = "entropy",
+                       iters: int = 3, seed: int = 0) -> dict:
+    """Full ``session.route`` with the observability plane enabled vs the
+    NULL_OBS default, interleaved best-of — the events/instruments are
+    batch-granular, so enabling them must stay within
+    ``OBS_OVERHEAD_MAX_RATIO`` of disabled at the headline shape."""
+    from repro.api import RouteSpec, build
+    from repro.obs import Observability
+    rng = np.random.default_rng(seed)
+    scores = _desc_scores(rng, b, k)
+    spec = RouteSpec(metric=metric, thresholds=(5.0,), top_k=k,
+                     tier_names=("qwen7b", "qwen72b"))
+    s_off = build(spec)
+    s_on = build(spec, obs=Observability())
+
+    def off():
+        return s_off.route(scores)
+
+    def on():
+        return s_on.route(scores)
+
+    if not np.array_equal(np.asarray(off().tiers),
+                          np.asarray(on().tiers)):   # also warms both jits
+        raise AssertionError(f"obs-on routing diverged at B={b} K={k}")
+    # A 5% gate on a ~6ms call needs a deeper best-of than the speedup
+    # cells (which clear by 10-70x): sub-gate noise would flake it.
+    it = max(_cell_iters(b, iters), 15)
+    t_off, t_on = _time_best_pair(off, on, it)
+    ratio = t_on / t_off
+    return {
+        "B": b, "K": k,
+        "obs_off_s": t_off, "obs_on_s": t_on,
+        "ratio": round(ratio, 4),
+        "max_ratio": OBS_OVERHEAD_MAX_RATIO,
+        "n_events": len(s_on.obs.tracer),
+        "passed": ratio <= OBS_OVERHEAD_MAX_RATIO,
+    }
+
+
 def run(grid: dict, iters: int = 3, metric: str = "entropy",
         backend_name: str = "auto") -> tuple[list[tuple], dict]:
     """Metric-path sweep. Returns (csv_rows, results keyed by (B, K))."""
@@ -308,6 +356,18 @@ def main() -> None:
                                         metric=args.metric,
                                         backend_name=args.backend)
         rows.extend(e2e_rows)
+    obs_overhead = None
+    if not args.smoke:
+        gb, gk = GATE_SHAPE
+        obs_overhead = bench_obs_overhead(gb, gk, metric=args.metric,
+                                          iters=args.iters)
+        tag = f"fastpath_obs/B{gb}_K{gk}"
+        rows.append((f"{tag}/ratio", obs_overhead["ratio"],
+                     "obs-enabled session.route / obs-off (gate <= "
+                     f"{OBS_OVERHEAD_MAX_RATIO})"))
+        rows.append((f"{tag}/obs_on_qps",
+                     round(gb / obs_overhead["obs_on_s"], 1),
+                     "full route() with metrics+tracing enabled"))
     wall = time.monotonic() - t0
     rows.append(("fastpath/wall_s", round(wall, 1), "total bench wall time"))
 
@@ -358,6 +418,7 @@ def main() -> None:
             } if e2e_results else None,
             "gate": gate,
             "per_cell_gate": cells,
+            "obs_overhead": obs_overhead,
             "smoke": args.smoke,
             "iters": args.iters,
             "wall_s": round(wall, 1),
@@ -383,6 +444,16 @@ def main() -> None:
             f"(acceptance: >= {GATE_SPEEDUP}x)")
         print(f"ACCEPT: batched fast path {gate['speedup']:.1f}x "
               f"per-request oracle at B={GATE_SHAPE[0]}, K={GATE_SHAPE[1]}")
+    if obs_overhead is not None:
+        assert obs_overhead["passed"], (
+            f"observability-enabled dispatch is "
+            f"{obs_overhead['ratio']:.3f}x the obs-off session at "
+            f"B={GATE_SHAPE[0]} K={GATE_SHAPE[1]} (acceptance: <= "
+            f"{OBS_OVERHEAD_MAX_RATIO}x — the plane must stay "
+            f"batch-granular on the hot path)")
+        print(f"ACCEPT: metrics+tracing overhead {obs_overhead['ratio']:.3f}x"
+              f" (<= {OBS_OVERHEAD_MAX_RATIO}x) at "
+              f"B={GATE_SHAPE[0]}, K={GATE_SHAPE[1]}")
 
 
 if __name__ == "__main__":

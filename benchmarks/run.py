@@ -55,6 +55,15 @@ def main() -> None:
     from benchmarks import policy_frontier_bench
     rows += policy_frontier_bench.csv_rows(quick=args.quick)
 
+    # -- serving-stack smokes (each bench's gates assert inside; the full
+    # sweeps with tracked JSON remain the standalone entries) ---------------
+    from benchmarks import (fabric_sync_bench, load_sim_bench,
+                            roofline_report, sharded_dispatch_bench)
+    rows += load_sim_bench.csv_rows(quick=True)
+    rows += fabric_sync_bench.csv_rows(quick=True)
+    rows += sharded_dispatch_bench.csv_rows(quick=True)
+    rows += roofline_report.csv_rows(quick=args.quick)
+
     rows.append(("total_wall_s", time.monotonic() - t0, ""))
     print("name,value,derived")
     for name, val, derived in rows:

@@ -158,6 +158,28 @@ def sweep(cfg: RouterConfig, batches, reps: int) -> list[dict]:
     return cells
 
 
+def csv_rows(quick: bool = True) -> list[tuple]:
+    """``benchmarks.run`` harness entry: the bit-for-bit parity gate +
+    a short throughput sweep. NOTE: when the harness imported jax before
+    this module, the forced multi-device host mesh is whatever that
+    import resolved (usually 1 device) — parity still gates; the
+    timings measure dispatch overhead only."""
+    cfg = RouterConfig(metric="entropy", thresholds=(4.0,),
+                       top_k=GATE_SHAPE[1])
+    gates = check_parity(cfg)
+    cells = sweep(cfg, SMOKE_SWEEP if quick else FULL_SWEEP,
+                  reps=3 if quick else 7)
+    rows: list[tuple] = [
+        ("sharded/parity", int(gates["bit_for_bit"]),
+         f"sharded == auto bit-for-bit on mesh {gates['mesh']}"),
+    ]
+    for c in cells:
+        rows.append((f"sharded/B{c['B']}_K{c['K']}/speedup",
+                     round(c["speedup"], 2),
+                     "auto wall / sharded wall (host mesh)"))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",

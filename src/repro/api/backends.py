@@ -190,6 +190,18 @@ class AutoBackend:
         self.crossover_batch = int(crossover_batch)
         self.oracle = OracleBackend()
         self.fused = FusedBackend(interpret=interpret)
+        # crossover-pick counters; replaced with live instruments when a
+        # session attaches its observability plane (attach_obs)
+        from repro.obs.registry import NULL_INSTRUMENT
+        self._m_pick = {"oracle": NULL_INSTRUMENT, "fused": NULL_INSTRUMENT}
+
+    def attach_obs(self, obs) -> None:
+        """Wire the session's observability plane in: which side of the
+        batch-size crossover each dispatch lands on becomes a counter
+        (``backend_pick_total{path=oracle|fused}``)."""
+        self._m_pick = {
+            path: obs.metrics.counter("backend_pick_total", path=path)
+            for path in ("oracle", "fused")}
 
     @property
     def interpret(self) -> Optional[bool]:
@@ -200,8 +212,10 @@ class AutoBackend:
 
     def pick(self, batch_size: int) -> DifficultyBackend:
         """The crossover in one place (bench/telemetry introspect this)."""
-        return self.oracle if batch_size < self.crossover_batch \
+        side = self.oracle if batch_size < self.crossover_batch \
             else self.fused
+        self._m_pick["oracle" if side is self.oracle else "fused"].inc()
+        return side
 
     def metrics(self, scores_desc, p_cdf: float = 0.95, n_valid=None):
         scores = jnp.atleast_2d(jnp.asarray(scores_desc))

@@ -33,6 +33,7 @@ import numpy as np
 from repro.api import backends as _backends
 from repro.api.spec import (ENVELOPE_VERSION, SCHEMA_VERSION, RouteSpec,
                             policy_fingerprint)
+from repro.obs import NULL_OBS, Observability
 from repro.serving import _deprecation
 from repro.serving.admission import AdmissionController
 from repro.serving.pipeline import PipelineTelemetry, ServingPipeline
@@ -54,8 +55,15 @@ class SkewRouteSession:
     """A running routing policy built from a :class:`RouteSpec`."""
 
     def __init__(self, spec: RouteSpec,
-                 runners: Optional[Union[Runners, EngineBankLike]] = None):
+                 runners: Optional[Union[Runners, EngineBankLike]] = None,
+                 obs: Optional[Observability] = None):
         self.spec = spec
+        # Observability is RUNTIME configuration (like runners): an
+        # `Observability` plane to record into, or None for the no-op
+        # plane. Never serialized into the spec; metric VALUES ride the
+        # snapshot envelope's state half when enabled (state["obs"]),
+        # trace events never do (local measurement history).
+        self.obs = obs or NULL_OBS
         # crossover_batch is policy and rides in the spec; interpret mode
         # is environment and is NEVER passed here — backends re-resolve
         # it per call (see repro.kernels.device.default_interpret), so a
@@ -63,6 +71,8 @@ class SkewRouteSession:
         backend_kwargs = ({"crossover_batch": spec.crossover_batch}
                           if spec.backend in ("auto", "sharded") else {})
         self.backend = _backends.make_backend(spec.backend, **backend_kwargs)
+        if hasattr(self.backend, "attach_obs"):
+            self.backend.attach_obs(self.obs)
         # One facade-level lock makes session verbs atomic w.r.t. each
         # other (the dispatcher's internal lock only covers its own
         # counters, not the pipeline queues a concurrent submit mutates).
@@ -78,7 +88,7 @@ class SkewRouteSession:
             self.dispatcher = SkewRouteDispatcher(
                 spec.router_config(), spec.models(),
                 cost_model=spec.cost_model(), backend=self.backend,
-                policy=self.policy)
+                policy=self.policy, obs=self.obs)
             cal = spec.calibration
             if cal.policy == "streaming":
                 self.dispatcher.attach_calibrator(
@@ -95,7 +105,7 @@ class SkewRouteSession:
                         "EngineBank) to repro.api.build")
                 self.admission = AdmissionController(
                     self.dispatcher.calibrator, spec.cost_model(),
-                    spec.models(), spec.admission)
+                    spec.models(), spec.admission, obs=self.obs)
             self.pipeline: Optional[ServingPipeline] = None
             if runners is not None:
                 if isinstance(runners, EngineBankLike):
@@ -103,7 +113,7 @@ class SkewRouteSession:
                 self.pipeline = ServingPipeline(
                     self.dispatcher, dict(runners),
                     micro_batch=spec.micro_batch,
-                    admission=self.admission)
+                    admission=self.admission, obs=self.obs)
 
     # -- views ----------------------------------------------------------------
 
@@ -230,6 +240,8 @@ class SkewRouteSession:
         if self.admission is not None:
             out["admission"] = self.admission.telemetry()
         out["policy"] = self.policy.telemetry()
+        if self.obs.enabled:
+            out["obs"] = self.obs.telemetry()
         return out
 
     # -- serializable state ---------------------------------------------------
@@ -276,6 +288,12 @@ class SkewRouteSession:
                 }
             if self.pipeline is not None:
                 state["pipeline"] = self.pipeline.telemetry.state_dict()
+            if self.obs.enabled:
+                # Metric values ride the envelope ONLY for obs-enabled
+                # sessions, so obs-less envelopes stay byte-identical to
+                # pre-obs builds. Trace events deliberately do not ride
+                # (a restored replica starts a fresh timeline).
+                state["obs"] = self.obs.state_dict()
             return {
                 "envelope_version": ENVELOPE_VERSION,
                 "policy": self.spec.to_dict(),
@@ -401,11 +419,25 @@ class SkewRouteSession:
             # payloads don't round-trip, counters restore on drained
             # queues only (and executed history resets to match)
             self.pipeline.load_telemetry(pipe_state)
+        if self.obs.enabled:
+            # Load the registry dump when the state carries one (absent
+            # in obs-less / pre-obs envelopes -> registry resets), then
+            # re-point every component's mirrors at its restored
+            # counters so registry views and counter views agree no
+            # matter where the state came from.
+            self.obs.load_state_dict(state.get("obs"))
+            d._obs_resync()
+            if self.admission is not None:
+                self.admission._obs_resync()
+            if self.pipeline is not None:
+                self.pipeline._obs_resync()
         return self
 
     @classmethod
     def from_snapshot(cls, snap: Mapping,
-                      runners: Optional[Runners] = None) -> "SkewRouteSession":
+                      runners: Optional[Runners] = None,
+                      obs: Optional[Observability] = None
+                      ) -> "SkewRouteSession":
         """Stand up a replica directly from another session's snapshot
         (envelope or legacy flat v1)."""
         policy = snap.get("policy") if "envelope_version" in snap \
@@ -414,11 +446,17 @@ class SkewRouteSession:
             raise ValueError("snapshot has no policy half (expected "
                              "'policy' in an envelope or 'spec' in a "
                              "legacy flat v1 snapshot)")
-        session = cls(RouteSpec.from_dict(policy), runners=runners)
+        session = cls(RouteSpec.from_dict(policy), runners=runners, obs=obs)
         return session.restore(snap)
 
 
 def build(spec: RouteSpec,
-          runners: Optional[Runners] = None) -> SkewRouteSession:
-    """The one entry point: declarative spec -> running session."""
-    return SkewRouteSession(spec, runners=runners)
+          runners: Optional[Runners] = None,
+          obs: Optional[Observability] = None) -> SkewRouteSession:
+    """The one entry point: declarative spec -> running session.
+
+    ``obs``: an :class:`repro.obs.Observability` plane to record
+    metrics + request traces into (runtime configuration, like
+    ``runners`` — never part of the spec). Default: the no-op plane.
+    """
+    return SkewRouteSession(spec, runners=runners, obs=obs)

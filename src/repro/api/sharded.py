@@ -108,6 +108,11 @@ class ShardedBackend:
         self._mesh = mesh
         self._programs: dict[tuple, object] = {}
 
+    def attach_obs(self, obs) -> None:
+        """Crossover-pick counters live on the inner ``auto`` (small
+        batches take its oracle path; sharded programs count as fused)."""
+        self.auto.attach_obs(obs)
+
     # -- mesh plumbing --------------------------------------------------------
 
     @property

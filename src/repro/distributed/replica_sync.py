@@ -220,8 +220,22 @@ class SyncEndpoint:
     def __init__(self, name: str, session, *,
                  peer_window: Optional[int] = None):
         from repro.api.spec import policy_fingerprint
+        from repro.obs import NULL_OBS
         self.name = str(name)
         self.session = session
+        # Sync traffic rides the session's observability plane: wire
+        # volume as counters, publish/merge as trace events (no-ops on
+        # obs-less sessions).
+        self.obs = getattr(session, "obs", None) or NULL_OBS
+        mx = self.obs.metrics
+        self._m_bytes = mx.counter("fabric_bytes_sent_total",
+                                   replica=self.name)
+        self._m_bytes_raw = mx.counter("fabric_bytes_raw_total",
+                                       replica=self.name)
+        self._m_publishes = mx.counter("fabric_publishes_total",
+                                       replica=self.name)
+        self._m_merges = mx.counter("fabric_merges_total",
+                                    replica=self.name)
         cal = session.calibrator
         if cal is None:
             raise ValueError(
@@ -295,6 +309,13 @@ class SyncEndpoint:
         comp, raw = delta_nbytes(delta)
         self.bytes_sent += comp
         self.bytes_sent_raw += raw
+        self._m_publishes.inc()
+        self._m_bytes.inc(comp)
+        self._m_bytes_raw.inc(raw)
+        if self.obs.enabled:
+            self.obs.tracer.event(
+                "sync_publish", replica=self.name, seq=delta.seq,
+                n_samples=delta.n_samples, bytes=comp, bytes_raw=raw)
         self.receive(delta.to_dict())
         return delta.to_dict()
 
@@ -381,6 +402,13 @@ class SyncEndpoint:
                 quantile_source=lambda qs: weighted_quantile(values, w, qs))
             cal._last_swap_at = cal.window.total_seen
             self.n_merges += 1
+            self._m_merges.inc()
+            if self.obs.enabled:
+                self.obs.tracer.event(
+                    "sync_merge", replica=self.name,
+                    n_origins=len(self.buffers),
+                    n_samples=int(values.size),
+                    thresholds=[float(t) for t in merged.thresholds])
         return merged
 
     # -- telemetry ------------------------------------------------------------

@@ -1,0 +1,98 @@
+"""Device-program profiling hooks: MEASURED wall time around jitted
+programs, next to the HLO-derived cost model.
+
+:func:`profile_program` compiles a function via
+``jax.jit(fn).lower(*args).compile()``, pulls the static cost story
+(FLOPs / bytes accessed / collectives via
+`repro.launch.hlo_cost.analyze`) and then times the compiled program
+with ``block_until_ready`` best-of-N — so a roofline row can report
+what the program DID next to what the model says it SHOULD do
+(``benchmarks/roofline_report.py --routing`` consumes this; ROADMAP's
+"modeled-only numbers" gap).
+
+The profile optionally records into a :class:`MetricsRegistry`
+(gauge ``program_wall_seconds{program=,shape=}`` + achieved-throughput
+gauges) so a serving process exposes its device-program timings
+through the same Prometheus snapshot as everything else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+__all__ = ["DeviceProgramProfile", "profile_program"]
+
+
+@dataclasses.dataclass
+class DeviceProgramProfile:
+    """One compiled program's measured + modeled numbers."""
+
+    name: str
+    shape: str
+    compile_s: float
+    wall_s: float            # best-of-N blocked wall time per call
+    iters: int
+    flops: float             # HLO-derived (loop-aware re-derivation)
+    bytes_accessed: float
+    achieved_gflops: float   # flops / wall_s / 1e9
+    achieved_gbps: float     # bytes_accessed / wall_s / 1e9
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def profile_program(fn, args: Sequence, *, name: str = "program",
+                    shape: str = "", iters: int = 10, warmup: int = 2,
+                    registry=None, timer=None,
+                    compiled=None) -> DeviceProgramProfile:
+    """Compile ``fn`` at ``args``'s shapes, then block-until-ready
+    best-of-``iters`` time it. ``timer`` defaults to
+    ``time.perf_counter`` (an obs ``clock.now`` works too — but note
+    a ManualClock makes the *measured* numbers synthetic; goldens
+    should pin the export format, not wall time). Pass ``compiled=``
+    (a ``jax.jit(fn).lower(args).compile()`` result) to profile a
+    program the caller already compiled — ``fn`` is ignored and
+    ``compile_s`` reports 0."""
+    import jax
+
+    from repro.launch import hlo_cost
+
+    timer = timer or time.perf_counter
+    if compiled is None:
+        t0 = timer()
+        compiled = jax.jit(fn).lower(*args).compile()
+        compile_s = timer() - t0
+    else:
+        compile_s = 0.0
+    lc = hlo_cost.analyze(compiled.as_text())
+
+    def once() -> float:
+        t = timer()
+        out = compiled(*args)
+        jax.block_until_ready(out)
+        return timer() - t
+
+    for _ in range(max(0, warmup)):
+        once()
+    wall = min(once() for _ in range(max(1, iters)))
+    wall = max(wall, 1e-12)
+
+    prof = DeviceProgramProfile(
+        name=name, shape=shape or "x".join(
+            str(getattr(a, "shape", "?")) for a in args),
+        compile_s=round(compile_s, 4), wall_s=wall, iters=iters,
+        flops=float(lc["flops"]), bytes_accessed=float(lc["bytes_accessed"]),
+        achieved_gflops=float(lc["flops"]) / wall / 1e9,
+        achieved_gbps=float(lc["bytes_accessed"]) / wall / 1e9)
+    if registry is not None:
+        labels = {"program": prof.name, "shape": prof.shape}
+        registry.gauge("program_wall_seconds", **labels).set(prof.wall_s)
+        registry.gauge("program_compile_seconds", **labels).set(
+            prof.compile_s)
+        registry.gauge("program_achieved_gbps", **labels).set(
+            prof.achieved_gbps)
+        registry.gauge("program_achieved_gflops", **labels).set(
+            prof.achieved_gflops)
+    return prof

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.cost import CostModel
 from repro.core.router import RouterConfig
 from repro.core.streaming_calibrate import StreamingCalibrator
+from repro.obs import NULL_OBS, str_keyed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,7 +172,7 @@ class AdmissionController:
 
     def __init__(self, calibrator: StreamingCalibrator,
                  cost_model: CostModel, tier_models: Sequence[str],
-                 spec: AdmissionSpec):
+                 spec: AdmissionSpec, obs=None):
         if calibrator is None:
             raise ValueError("admission control needs a streaming "
                              "calibrator (its window is the quantile "
@@ -217,6 +218,33 @@ class AdmissionController:
         self.events: list[dict] = []   # spill_on/off + tighten/relax log
         self._last_control = -spec.control_interval  # allow immediate action
         self._tier_load: dict[int, dict] = {}
+        # Observability mirrors (no-ops under NULL_OBS); the counters /
+        # event log above stay the serialization source.
+        self.obs = obs or NULL_OBS
+        m = self.obs.metrics
+        self._m_spilled = m.counter("admission_spilled_total")
+        self._m_tighten = m.counter("admission_tighten_total")
+        self._m_relax = m.counter("admission_relax_total")
+        self._g_cost = m.gauge("admission_cost_per_query")
+        self._g_top_share = m.gauge("admission_top_share")
+        self._g_pressure = {t: m.gauge("admission_pressure", tier=str(t))
+                            for t in self.tier_pressure}
+        self._g_spill = {t: m.gauge("admission_spill_engaged", tier=str(t))
+                         for t in self.tier_spill}
+
+    def _obs_resync(self) -> None:
+        """Re-point the registry's admission mirrors at (restored) state."""
+        if not self.obs.enabled:
+            return
+        self._m_spilled.value = self.n_spilled
+        self._m_tighten.value = self.n_tighten
+        self._m_relax.value = self.n_relax
+        self._g_cost.set(self.cost_per_query or 0.0)
+        self._g_top_share.set(self.shares[self.top])
+        for t, g in self._g_pressure.items():
+            g.set(self.tier_pressure[t])
+        for t, g in self._g_spill.items():
+            g.set(int(self.tier_spill[t]))
 
     # -- load probes ----------------------------------------------------------
 
@@ -255,6 +283,10 @@ class AdmissionController:
         self.events.append({"at_request": self.n_seen, "kind": kind,
                             "pressure": round(self.pressure, 6),
                             "shares": list(self.shares), **extra})
+        if self.obs.enabled:
+            self.obs.tracer.event("admission_" + kind,
+                                  at_request=self.n_seen,
+                                  pressure=round(self.pressure, 6), **extra)
 
     def _with_top_share(self, new_top: float) -> tuple[float, ...]:
         """Current shares with the top tier moved to ``new_top``; lower
@@ -283,6 +315,8 @@ class AdmissionController:
             elif self.tier_spill[t] and p <= spec.spill_off:
                 self.tier_spill[t] = False
                 self._event("spill_off", tier=t)
+            self._g_pressure[t].set(p)
+            self._g_spill[t].set(int(self.tier_spill[t]))
 
         if self.n_seen - self._last_control < spec.control_interval:
             return None
@@ -318,8 +352,11 @@ class AdmissionController:
         self._last_control = self.n_seen
         if kind == "tighten":
             self.n_tighten += 1
+            self._m_tighten.inc()
         else:
             self.n_relax += 1
+            self._m_relax.inc()
+        self._g_top_share.set(self.shares[self.top])
         new_config = self.calibrator.fit_config()
         self._event(kind, budget_ratio=(None if budget_ratio is None
                                         else round(budget_ratio, 6)),
@@ -382,12 +419,14 @@ class AdmissionController:
                     tiers[marginal] = self.spill_target()
         self.n_seen += n
         self.n_spilled += spilled
+        self._m_spilled.inc(spilled)
         batch_cost = float((self._tier_cost[tiers] + extra).mean())
         if self.cost_per_query is None:
             self.cost_per_query = batch_cost
         else:
             self.cost_per_query += self.spec.pressure_beta * (
                 batch_cost - self.cost_per_query)
+        self._g_cost.set(self.cost_per_query)
         return tiers, spilled
 
     # -- replica-fabric sync --------------------------------------------------
@@ -401,10 +440,8 @@ class AdmissionController:
         ``state_dict``: events/tier_load are local history, and counters
         other than ``n_seen`` don't participate in the merge."""
         return {
-            "tier_pressure": {str(t): float(p)
-                              for t, p in self.tier_pressure.items()},
-            "tier_spill": {str(t): bool(s)
-                           for t, s in self.tier_spill.items()},
+            "tier_pressure": str_keyed(self.tier_pressure),
+            "tier_spill": str_keyed(self.tier_spill),
             "cost_per_query": self.cost_per_query,
             "shares": list(self.shares),
             "n_seen": self.n_seen,
@@ -436,9 +473,8 @@ class AdmissionController:
         return {
             "spill_active": self.spill_active,
             "pressure": self.pressure,
-            "tier_pressure": {str(t): p
-                              for t, p in self.tier_pressure.items()},
-            "tier_spill": {str(t): s for t, s in self.tier_spill.items()},
+            "tier_pressure": str_keyed(self.tier_pressure),
+            "tier_spill": str_keyed(self.tier_spill),
             "cost_per_query": self.cost_per_query,
             "target_shares": list(self.shares),
             "baseline_shares": list(self.baseline_shares),
@@ -460,9 +496,8 @@ class AdmissionController:
             # 2-tier snapshots and this layout read the same way
             "spill_active": self.spill_active,
             "pressure": self.pressure,
-            "tier_pressure": {str(t): p
-                              for t, p in self.tier_pressure.items()},
-            "tier_spill": {str(t): s for t, s in self.tier_spill.items()},
+            "tier_pressure": str_keyed(self.tier_pressure),
+            "tier_spill": str_keyed(self.tier_spill),
             "cost_per_query": self.cost_per_query,
             "n_seen": self.n_seen,
             "n_spilled": self.n_spilled,

@@ -49,6 +49,18 @@ class ReplicaFabric:
     def sessions(self) -> dict:
         return {n: e.session for n, e in self.endpoints.items()}
 
+    def _obs(self):
+        """The fabric traces onto the first (sorted) member's
+        observability plane — the common deployment shares ONE plane
+        across replicas; disjoint planes still get their per-endpoint
+        publish/merge events, just no round-level span."""
+        from repro.obs import NULL_OBS
+        for n in sorted(self.endpoints):
+            obs = self.endpoints[n].obs
+            if obs.enabled:
+                return obs
+        return NULL_OBS
+
     # -- membership -----------------------------------------------------------
 
     def add_replica(self, name: str, session, *,
@@ -104,22 +116,26 @@ class ReplicaFabric:
         moved) — the convergence bench's raw material.
         """
         names = sorted(self.endpoints)
-        payloads = {n: json.loads(json.dumps(self.endpoints[n].publish()))
-                    for n in names}
-        for n in names:
-            for origin, payload in payloads.items():
-                if origin != n:
-                    self.endpoints[n].receive(payload)
-        report: dict = {"round": self.n_rounds, "replicas": {}}
-        for n in names:
-            ep = self.endpoints[n]
-            merged = ep.merge(apply=True)
-            report["replicas"][n] = {
-                "merged": merged is not None,
-                "thresholds": [float(t) for t in ep.session.thresholds],
-                "bytes_sent": ep.bytes_sent,
-            }
+        obs = self._obs()
+        with obs.tracer.span("sync_round", round=self.n_rounds,
+                             n_replicas=len(names)):
+            payloads = {n: json.loads(json.dumps(self.endpoints[n].publish()))
+                        for n in names}
+            for n in names:
+                for origin, payload in payloads.items():
+                    if origin != n:
+                        self.endpoints[n].receive(payload)
+            report: dict = {"round": self.n_rounds, "replicas": {}}
+            for n in names:
+                ep = self.endpoints[n]
+                merged = ep.merge(apply=True)
+                report["replicas"][n] = {
+                    "merged": merged is not None,
+                    "thresholds": [float(t) for t in ep.session.thresholds],
+                    "bytes_sent": ep.bytes_sent,
+                }
         self.n_rounds += 1
+        obs.metrics.counter("fabric_rounds_total").inc()
         return report
 
     # -- telemetry ------------------------------------------------------------

@@ -32,7 +32,8 @@ from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost import PAPER_QUALITY
+from repro.core.cost import PAPER_QUALITY, TOKENS_BARE_QUESTION
+from repro.obs import NULL_OBS
 from repro.serving.loadgen.workload import TraceSpec, generate
 from repro.serving.scheduler import Replica, Request, TierScheduler
 
@@ -63,14 +64,39 @@ def make_pools(replica_speeds: Mapping[int, Sequence[float]],
         for t, speeds in replica_speeds.items()}
 
 
+def apply_tier_topology(pools: Mapping[int, TierScheduler],
+                        topology: Optional[Mapping]) -> None:
+    """Stamp each pool with its execution mode from a policy's
+    ``tier_topology()`` (``mode_select``): ``pools[t].mode`` becomes the
+    tier's mode string. Pool runners read the mode at CALL time, so a
+    ``no_rag`` tier's requests carry the bare-question prompt length
+    instead of the full KG-RAG context — before this, depth-0 requests
+    still transited the pool priced as 100-triple prompts."""
+    if not topology:
+        return
+    modes = topology.get("modes") or []
+    for t, mode in enumerate(modes):
+        if t in pools:
+            pools[t].mode = str(mode)
+
+
 def make_pool_runners(pools: Mapping[int, TierScheduler]):
     """{tier: runner} for ``repro.api.build(spec, runners=...)``: each
     micro-batch of :class:`SimRequest` payloads becomes scheduler
-    Requests admitted to that tier's replica pool."""
+    Requests admitted to that tier's replica pool.
+
+    Runners are MODE-AWARE: a pool stamped ``no_rag`` (see
+    :func:`apply_tier_topology`) admits requests at the bare-question
+    prompt length — no retrieval context is shipped, so none is decoded.
+    The mode is read per call, so topology applied after runner
+    construction still takes effect."""
     def _make(tier: int):
         def run(batch: list) -> list[Request]:
+            no_rag = getattr(pools[tier], "mode", "kg_rag") == "no_rag"
             reqs = [Request(request_id=p.request_id, tier=tier,
-                            prompt_len=p.prompt_len, max_new=p.max_new,
+                            prompt_len=(TOKENS_BARE_QUESTION if no_rag
+                                        else p.prompt_len),
+                            max_new=p.max_new,
                             deadline=p.deadline,
                             submitted_at=p.submitted_at)
                     for p in batch]
@@ -137,7 +163,8 @@ def canonical_load_runner(with_admission: bool, trace: TraceSpec,
                           slo_latency: float = 1.0,
                           base_token_time: float = 8e-5,
                           record_every: int = 1,
-                          policy: Optional[str] = None) -> "LoadRunner":
+                          policy: Optional[str] = None,
+                          obs=None) -> "LoadRunner":
     """The tuned serving setup the canonical traces are stressed against
     (shared by benchmarks/load_sim_bench.py, CI, tests, and the example
     so they all measure the same thing):
@@ -156,6 +183,11 @@ def canonical_load_runner(with_admission: bool, trace: TraceSpec,
     (:func:`canonical_policy_spec`). ``mode_select`` routes a THREE-tier
     topology (no-RAG qwen7b / KG-RAG qwen14b / KG-RAG qwen72b) with a
     mid-sized middle pool; every other policy keeps the 2-tier setup.
+
+    ``obs`` (an :class:`~repro.obs.Observability`) threads the unified
+    observability plane through the whole replay: dispatch/policy/spill/
+    execute trace events from the session plus the runner's completion
+    events, so one replay yields a full per-request timeline.
     """
     from repro.api import (AdmissionSpec, CalibrationSpec,  # lazy: keep
                            RouteSpec, build)  # serving -> api edge soft
@@ -187,7 +219,7 @@ def canonical_load_runner(with_admission: bool, trace: TraceSpec,
         policy=policy_spec)
     pools = make_pools(speeds, batch_slots=slots,
                        base_token_time=base_token_time)
-    session = build(spec, runners=make_pool_runners(pools))
+    session = build(spec, runners=make_pool_runners(pools), obs=obs)
     return LoadRunner(session, pools, slo_latency=slo_latency,
                       record_every=record_every)
 
@@ -236,6 +268,29 @@ class LoadRunner:
         self.p99_horizon = (float(p99_horizon) if p99_horizon is not None
                             else 5.0 * self.slo_latency)
         self._next_id = 0
+        # Mode topology: a policy that distinguishes execution modes
+        # (mode_select) stamps each pool, so no_rag tiers serve
+        # bare-question prompts (make_pool_runners reads pool.mode).
+        policy = getattr(session, "policy", None)
+        topo = getattr(policy, "tier_topology", None)
+        apply_tier_topology(self.pools, topo() if callable(topo) else None)
+        # Observability rides the session's plane (NULL_OBS when the
+        # session was built without one — every instrument is a no-op).
+        self.obs = getattr(session, "obs", None) or NULL_OBS
+        mx = self.obs.metrics
+        lat_buckets = tuple(
+            self.slo_latency * f
+            for f in (0.1, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0, 8.0))
+        self._m_completed = {
+            t: mx.counter("load_completed_total", tier=str(t))
+            for t in self.pools}
+        self._h_latency = {
+            t: mx.histogram("load_completion_seconds", lat_buckets,
+                            tier=str(t))
+            for t in self.pools}
+        self._g_queue = {
+            t: mx.gauge("load_queue_depth", tier=str(t))
+            for t in self.pools}
 
     # -- per-tick pieces -------------------------------------------------------
 
@@ -258,6 +313,28 @@ class LoadRunner:
             self.session.observe_tier_load(
                 t, pool.queue_depth(),
                 p99_latency=pool.p99_latency(horizon=self.p99_horizon))
+
+    def _step_pools(self, now: float) -> None:
+        """Advance every pool one tick; fold completions into the obs
+        plane — latency histograms, completion counters, and one
+        ``complete`` trace event per (tier, tick) batch."""
+        obs_on = self.obs.enabled
+        for t, pool in self.pools.items():
+            completed = pool.step(now)
+            if not obs_on:
+                continue
+            self._g_queue[t].set(pool.queue_depth())
+            if not completed:
+                continue
+            self._m_completed[t].inc(len(completed))
+            lats = [float(r.finished_at - r.submitted_at)
+                    for r in completed]
+            for lat in lats:
+                self._h_latency[t].observe(lat)
+            self.obs.tracer.event(
+                "complete", tier=t,
+                request_ids=[int(r.request_id) for r in completed],
+                latencies=[round(l, 9) for l in lats])
 
     def _record_step(self, wstep, now: float) -> dict:
         adm = getattr(self.session, "admission", None)
@@ -302,8 +379,7 @@ class LoadRunner:
                 self.session.submit(wstep.scores, payloads)
                 # bound micro-batch queueing delay to one tick
                 self.session.flush()
-            for pool in self.pools.values():
-                pool.step(now)
+            self._step_pools(now)
             if wstep.step % self.record_every == 0:
                 steps.append(self._record_step(wstep, now))
         self.session.flush()
@@ -317,8 +393,7 @@ class LoadRunner:
             if not any(p.pending or p.inflight for p in self.pools.values()):
                 return now
             now += max(dt, 0.05)
-            for p in self.pools.values():
-                p.step(now)
+            self._step_pools(now)
         raise RuntimeError(
             "replica pools failed to drain (a replica left unhealthy "
             "forever, or work outpaces capacity unboundedly)")
@@ -365,6 +440,10 @@ class LoadRunner:
             "tier_p99": {str(t): p.p99_latency()
                          for t, p in self.pools.items()},
         }
+        if any(getattr(p, "mode", "kg_rag") != "kg_rag"
+               for p in self.pools.values()):
+            summary["tier_modes"] = {
+                str(t): p.mode for t, p in self.pools.items()}
         if adm is not None:
             summary["admission"] = adm.telemetry()
         policy = getattr(self.session, "policy", None)

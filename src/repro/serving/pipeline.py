@@ -41,6 +41,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import NULL_OBS, int_keyed, str_keyed
 from repro.serving import _deprecation
 from repro.serving.admission import AdmissionController
 from repro.serving.router_service import (BatchDispatchResult,
@@ -77,8 +78,7 @@ class PipelineTelemetry:
 
     def snapshot(self, queues: dict[int, MicroBatchQueue]) -> dict:
         state = self.state_dict()
-        state["tier_counts"] = {int(t): c
-                                for t, c in state["tier_counts"].items()}
+        state["tier_counts"] = int_keyed(state["tier_counts"])
         state["queue_depths"] = {t: len(q) for t, q in queues.items()}
         return state
 
@@ -91,7 +91,7 @@ class PipelineTelemetry:
             "n_microbatches": self.n_microbatches,
             "n_recalibrations": self.n_recalibrations,
             "n_spilled": self.n_spilled,
-            "tier_counts": {str(t): c for t, c in self.tier_counts.items()},
+            "tier_counts": str_keyed(self.tier_counts),
         }
 
     def load_state_dict(self, state: dict) -> None:
@@ -101,8 +101,7 @@ class PipelineTelemetry:
         self.n_recalibrations = int(state["n_recalibrations"])
         # absent in pre-admission snapshots; those never spilled
         self.n_spilled = int(state.get("n_spilled", 0))
-        self.tier_counts = {int(t): int(c)
-                            for t, c in state["tier_counts"].items()}
+        self.tier_counts = int_keyed(state["tier_counts"])
 
 
 class ServingPipeline:
@@ -111,7 +110,8 @@ class ServingPipeline:
     def __init__(self, dispatcher: SkewRouteDispatcher,
                  runners: dict[int, Callable[[list], object]],
                  micro_batch: int = 8,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 obs=None):
         _deprecation.warn_once(
             "ServingPipeline",
             "hand-wiring ServingPipeline is deprecated; declare the policy "
@@ -132,15 +132,63 @@ class ServingPipeline:
         self.telemetry = PipelineTelemetry(
             tier_counts={t: 0 for t in range(n_tiers)})
         self.executed: list[ExecutedBatch] = []
+        # Observability mirrors. The per-tier `_queued_ids` shadow queues
+        # (obs-enabled only) track WHICH request ids sit in each
+        # MicroBatchQueue — both are strict FIFO, so the ids popped in
+        # `_run` name exactly the payloads in that micro-batch without
+        # touching the runner payload contract.
+        self.obs = obs if obs is not None else getattr(
+            dispatcher, "obs", NULL_OBS)
+        m = self.obs.metrics
+        self._m_submitted = m.counter("pipeline_submitted_total")
+        self._m_executed = m.counter("pipeline_executed_total")
+        self._m_microbatches = m.counter("pipeline_microbatches_total")
+        self._m_recal = m.counter("pipeline_recalibrations_total")
+        self._m_spilled = m.counter("pipeline_spilled_total")
+        self._m_tiers = [m.counter("pipeline_tier_executed_total",
+                                   tier=str(t)) for t in range(n_tiers)]
+        self._g_pending = [m.gauge("pipeline_queue_depth", tier=str(t))
+                           for t in range(n_tiers)]
+        self._h_run_s = m.histogram("pipeline_run_seconds")
+        self._queued_ids: dict[int, list] = {t: [] for t in range(n_tiers)}
+
+    def _obs_resync(self) -> None:
+        """Re-point the registry's pipeline mirrors at the (restored)
+        telemetry counters; called by the session after restore."""
+        if not self.obs.enabled:
+            return
+        t = self.telemetry
+        self._m_submitted.value = t.n_submitted
+        self._m_executed.value = t.n_executed
+        self._m_microbatches.value = t.n_microbatches
+        self._m_recal.value = t.n_recalibrations
+        self._m_spilled.value = t.n_spilled
+        for tier, mt in enumerate(self._m_tiers):
+            mt.value = t.tier_counts.get(tier, 0)
+        for tier, g in enumerate(self._g_pending):
+            g.set(len(self.queues[tier]))
 
     # -- internals ------------------------------------------------------------
 
     def _run(self, tier: int, batch: list) -> None:
+        obs_on = self.obs.enabled
+        rids = None
+        if obs_on:
+            q = self._queued_ids[tier]
+            rids, self._queued_ids[tier] = q[:len(batch)], q[len(batch):]
+            t0 = self.obs.clock.now()
         result = self.runners[tier](batch)
         self.executed.append(ExecutedBatch(tier=tier, size=len(batch),
                                            result=result))
         self.telemetry.n_microbatches += 1
         self.telemetry.n_executed += len(batch)
+        self._m_microbatches.inc()
+        self._m_executed.inc(len(batch))
+        if obs_on:
+            self._h_run_s.observe(self.obs.clock.now() - t0)
+            self._g_pending[tier].set(len(self.queues[tier]))
+            self.obs.tracer.event("execute", tier=tier, request_ids=rids,
+                                  n=len(batch))
 
     # -- the flow -------------------------------------------------------------
 
@@ -166,43 +214,64 @@ class ServingPipeline:
         if payloads is not None and len(payloads) != scores.shape[0]:
             raise ValueError(f"{scores.shape[0]} score rows but "
                              f"{len(payloads)} payloads")
-        res: BatchDispatchResult = self.dispatcher.dispatch_batch(
-            scores, n_valid=n_valid, return_details=True,
-            self_scores=self_scores)
-        exec_tiers = res.tiers
-        if self.admission is not None:
-            new_config = self.admission.control_step()
-            if new_config is not None:
-                self.dispatcher.apply_config(new_config)
+        obs_on = self.obs.enabled
+        with self.obs.tracer.span("submit", batch=int(scores.shape[0])):
+            res: BatchDispatchResult = self.dispatcher.dispatch_batch(
+                scores, n_valid=n_valid, return_details=True,
+                self_scores=self_scores)
+            exec_tiers = res.tiers
+            if self.admission is not None:
+                new_config = self.admission.control_step()
+                if new_config is not None:
+                    self.dispatcher.apply_config(new_config)
+                    self.telemetry.n_recalibrations += 1
+                    self._m_recal.inc()
+                # request_cost (when the policy priced per request —
+                # cascade stage bills, depth-priced prompts) flows into
+                # the budget EWMA so admission reacts to what the
+                # decision actually costs, not the flat per-tier price.
+                exec_tiers, n_spilled = self.admission.apply(
+                    res.tiers, res.difficulty, request_cost=res.request_cost)
+                self.telemetry.n_spilled += n_spilled
+                self._m_spilled.inc(n_spilled)
+                if obs_on and n_spilled:
+                    moved = np.flatnonzero(exec_tiers != res.tiers)
+                    self.obs.tracer.event(
+                        "spill",
+                        request_ids=[res.first_id + int(i) for i in moved],
+                        **{"from": res.tiers[moved].tolist(),
+                           "to": exec_tiers[moved].tolist()})
+            # per-request records are lazy; only build them when they ARE
+            # the payloads — with explicit payloads the tier array is all
+            # we need
+            items = payloads if payloads is not None else res.records
+            self.telemetry.n_submitted += len(items)
+            self._m_submitted.inc(len(items))
+            if res.recalibrated:
                 self.telemetry.n_recalibrations += 1
-            # request_cost (when the policy priced per request — cascade
-            # stage bills, depth-priced prompts) flows into the budget
-            # EWMA so admission reacts to what the decision actually
-            # costs, not the flat per-tier price.
-            exec_tiers, n_spilled = self.admission.apply(
-                res.tiers, res.difficulty, request_cost=res.request_cost)
-            self.telemetry.n_spilled += n_spilled
-        # per-request records are lazy; only build them when they ARE the
-        # payloads — with explicit payloads the tier array is all we need
-        items = payloads if payloads is not None else res.records
-        self.telemetry.n_submitted += len(items)
-        if res.recalibrated:
-            self.telemetry.n_recalibrations += 1
-        for tier, item in zip(exec_tiers.tolist(), items):
-            self.telemetry.tier_counts[tier] += 1
-            for full in self.queues[tier].push(item):
-                self._run(tier, full)
+                self._m_recal.inc()
+            for i, (tier, item) in enumerate(zip(exec_tiers.tolist(), items)):
+                self.telemetry.tier_counts[tier] += 1
+                self._m_tiers[tier].inc()
+                if obs_on:
+                    self._queued_ids[tier].append(res.first_id + i)
+                for full in self.queues[tier].push(item):
+                    self._run(tier, full)
+            if obs_on:
+                for tier, g in enumerate(self._g_pending):
+                    g.set(len(self.queues[tier]))
         return res
 
     def flush(self) -> int:
         """Drain partial micro-batches (burst tail / shutdown); returns
         the number of requests executed."""
         drained = 0
-        for tier, q in self.queues.items():
-            tail = q.flush()
-            if tail:
-                self._run(tier, tail)
-                drained += len(tail)
+        with self.obs.tracer.span("flush"):
+            for tier, q in self.queues.items():
+                tail = q.flush()
+                if tail:
+                    self._run(tier, tail)
+                    drained += len(tail)
         return drained
 
     def pending(self) -> int:
@@ -222,6 +291,8 @@ class ServingPipeline:
         self.telemetry.load_state_dict(state)
         # executed-batch history must match the restored counters
         self.executed.clear()
+        self._queued_ids = {t: [] for t in self.queues}
+        self._obs_resync()
 
     def stats(self) -> dict:
         out = self.telemetry.snapshot(self.queues)

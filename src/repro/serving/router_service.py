@@ -40,6 +40,7 @@ from repro.core.calibrate import calibrate_multi_tier
 from repro.core.cost import CostModel
 from repro.core.router import RouteBatchResult, RouterConfig
 from repro.core.streaming_calibrate import StreamingCalibrator
+from repro.obs import NULL_OBS, str_keyed, int_keyed
 from repro.serving import _deprecation
 from repro.serving.scheduler import bucket_size
 
@@ -123,7 +124,7 @@ class DispatcherStats:
             "n_requests": self.n_requests,
             "n_batches": self.n_batches,
             "n_recalibrations": self.n_recalibrations,
-            "tier_counts": {str(t): c for t, c in self.tier_counts.items()},
+            "tier_counts": str_keyed(self.tier_counts),
             "total_cost": self.total_cost,
             "mean_difficulty": self.mean_difficulty,
         }
@@ -132,8 +133,7 @@ class DispatcherStats:
         self.n_requests = int(state["n_requests"])
         self.n_batches = int(state["n_batches"])
         self.n_recalibrations = int(state["n_recalibrations"])
-        self.tier_counts = {int(t): int(c)
-                            for t, c in state["tier_counts"].items()}
+        self.tier_counts = int_keyed(state["tier_counts"])
         self.total_cost = float(state["total_cost"])
         self.mean_difficulty = float(state["mean_difficulty"])
 
@@ -142,7 +142,7 @@ class SkewRouteDispatcher:
     def __init__(self, router: RouterConfig, tier_names: Sequence[str],
                  cost_model: Optional[CostModel] = None,
                  calibrator: Optional[StreamingCalibrator] = None,
-                 backend=None, policy=None):
+                 backend=None, policy=None, obs=None):
         _deprecation.warn_once(
             "SkewRouteDispatcher",
             "hand-wiring SkewRouteDispatcher is deprecated; declare the "
@@ -171,6 +171,36 @@ class SkewRouteDispatcher:
                                                   range(router.n_tiers)})
         self._lock = threading.Lock()
         self._next_id = 0
+        # Observability mirrors: instruments looked up ONCE here; every
+        # record below is a plain attribute bump (no-ops under NULL_OBS).
+        # DispatcherStats stays the serialization source; the registry is
+        # the live read surface (old accessors preserved as views).
+        self.obs = obs or NULL_OBS
+        m = self.obs.metrics
+        self._m_requests = m.counter("routing_requests_total")
+        self._m_batches = m.counter("routing_batches_total")
+        self._m_recal = m.counter("routing_recalibrations_total")
+        self._m_cost = m.counter("routing_cost_dollars_total")
+        self._m_mean_diff = m.gauge("routing_mean_difficulty")
+        self._m_dispatch_s = m.histogram("routing_dispatch_seconds")
+        self._m_tiers = [m.counter("routing_tier_decisions_total",
+                                   tier=str(t))
+                         for t in range(router.n_tiers)]
+
+    def _obs_resync(self) -> None:
+        """Point the registry's dispatcher mirrors at the (restored)
+        stats — called by the session after a state restore so the live
+        metrics agree with the restored counters."""
+        if not self.obs.enabled:
+            return
+        s = self.stats
+        self._m_requests.value = s.n_requests
+        self._m_batches.value = s.n_batches
+        self._m_recal.value = s.n_recalibrations
+        self._m_cost.value = s.total_cost
+        self._m_mean_diff.value = s.mean_difficulty
+        for t, mt in enumerate(self._m_tiers):
+            mt.value = s.tier_counts.get(t, 0)
 
     # -- calibration ----------------------------------------------------------
 
@@ -195,9 +225,14 @@ class SkewRouteDispatcher:
         with self._lock:
             self.router = new_router
             self.stats.n_recalibrations += 1
+            self._m_recal.inc()
             if self.calibrator is not None:
                 self.calibrator.config = new_router
             self._refit_policy_locked(quantile_source)
+        if self.obs.enabled:
+            self.obs.tracer.event(
+                "hot_swap", thresholds=list(new_router.thresholds),
+                metric=new_router.metric)
 
     def _refit_policy_locked(self, quantile_source=None) -> None:
         """Policy-cutoff refit half of a hot-swap; caller holds the lock."""
@@ -255,16 +290,21 @@ class SkewRouteDispatcher:
         if n_valid is not None:
             nv[:b] = np.asarray(n_valid, np.int32)
         nv[b:] = 1  # padded rows: degenerate but well-defined
-        result: RouteBatchResult = self.backend.route_batch(
-            jnp.asarray(scores), self.router, n_valid=jnp.asarray(nv))
-        tiers = np.asarray(result.tiers)[:b]
-        diff = np.asarray(result.difficulty)[:b]
-        metrics = np.asarray(result.metrics)[:b]
+        with self.obs.tracer.span("dispatch", batch=b):
+            obs_on = self.obs.enabled
+            t0 = self.obs.clock.now() if obs_on else 0.0
+            result: RouteBatchResult = self.backend.route_batch(
+                jnp.asarray(scores), self.router, n_valid=jnp.asarray(nv))
+            tiers = np.asarray(result.tiers)[:b]
+            diff = np.asarray(result.difficulty)[:b]
+            metrics = np.asarray(result.metrics)[:b]
+            if obs_on:  # np.asarray forced the device sync above
+                self._m_dispatch_s.observe(self.obs.clock.now() - t0)
 
-        decision = self.policy.decide(tiers, diff, metrics,
-                                      self_scores=self_scores)
-        first_id, metric_name, recalibrated = self._record_batch(
-            decision.tiers, diff, decision)
+            decision = self.policy.decide(tiers, diff, metrics,
+                                          self_scores=self_scores)
+            first_id, metric_name, recalibrated = self._record_batch(
+                decision.tiers, diff, decision, backend_tiers=tiers)
         if not return_details:
             return decision.tiers
         return BatchDispatchResult(tiers=decision.tiers, difficulty=diff,
@@ -306,15 +346,20 @@ class SkewRouteDispatcher:
                 [feats, np.zeros((bpad - b,) + feats.shape[1:], feats.dtype)])
             qemb = np.concatenate(
                 [qemb, np.zeros((bpad - b, qemb.shape[1]), qemb.dtype)])
-        res = self.backend.route_retrieved(
-            jnp.asarray(feats), jnp.asarray(qemb), scorer_params,
-            self.router, n_cand=jnp.asarray(nc))
-        tiers = np.asarray(res.tiers)[:b]
-        diff = np.asarray(res.difficulty)[:b]
-        metrics = np.asarray(res.metrics)[:b]
-        decision = self.policy.decide(tiers, diff, metrics)
-        first_id, metric_name, recalibrated = self._record_batch(
-            decision.tiers, diff, decision)
+        with self.obs.tracer.span("dispatch_retrieved", batch=b):
+            obs_on = self.obs.enabled
+            t0 = self.obs.clock.now() if obs_on else 0.0
+            res = self.backend.route_retrieved(
+                jnp.asarray(feats), jnp.asarray(qemb), scorer_params,
+                self.router, n_cand=jnp.asarray(nc))
+            tiers = np.asarray(res.tiers)[:b]
+            diff = np.asarray(res.difficulty)[:b]
+            metrics = np.asarray(res.metrics)[:b]
+            if obs_on:
+                self._m_dispatch_s.observe(self.obs.clock.now() - t0)
+            decision = self.policy.decide(tiers, diff, metrics)
+            first_id, metric_name, recalibrated = self._record_batch(
+                decision.tiers, diff, decision, backend_tiers=tiers)
         nv_out = np.asarray(res.n_valid)[:b]
         probs = np.asarray(res.probs)[:b]
         if decision.depths is not None:
@@ -337,9 +382,13 @@ class SkewRouteDispatcher:
             n_valid=nv_out)
 
     def _record_batch(self, tiers: np.ndarray, diff: np.ndarray,
-                      decision=None) -> tuple[int, str, bool]:
+                      decision=None, backend_tiers=None
+                      ) -> tuple[int, str, bool]:
         """The control-plane half shared by every dispatch entry: request
-        ids, tier/cost/difficulty counters, drift-aware recalibration."""
+        ids, tier/cost/difficulty counters, drift-aware recalibration.
+        ``backend_tiers`` is the difficulty backend's threshold decision
+        (pre-policy) — the trace's ``dispatch`` event carries it so a
+        request's timeline shows both halves of the decision."""
         b = len(tiers)
         recalibrated = False
         with self._lock:
@@ -353,6 +402,7 @@ class SkewRouteDispatcher:
             self.stats.mean_difficulty = (
                 (self.stats.mean_difficulty * total + float(diff.sum()))
                 / max(self.stats.n_requests, 1))
+            cost_before = self.stats.total_cost
             if decision is not None and decision.request_cost is not None:
                 # The policy priced each request itself (per-stage cascade
                 # bills, per-depth prompt lengths) — the ledger takes the
@@ -370,14 +420,46 @@ class SkewRouteDispatcher:
                     if name in self.cost_model.cost_per_mtok:
                         self.stats.total_cost += (
                             self.cost_model.request_cost(name) * int(c))
+            # registry mirrors (no-ops under NULL_OBS)
+            self._m_requests.inc(b)
+            self._m_batches.inc()
+            self._m_cost.inc(self.stats.total_cost - cost_before)
+            self._m_mean_diff.set(self.stats.mean_difficulty)
+            for t, c in enumerate(counts):
+                if c:
+                    self._m_tiers[t].inc(int(c))
             if self.calibrator is not None:
                 new_config = self.calibrator.observe(diff)
                 if new_config is not None:
                     self.router = new_config
                     self.stats.n_recalibrations += 1
+                    self._m_recal.inc()
                     recalibrated = True
                     # An inline drift swap re-fits the policy from the
                     # window that produced the new thresholds (same rule
                     # as apply_config; we already hold the lock).
                     self._refit_policy_locked()
+        if self.obs.enabled:
+            # Batch-granularity trace events: one "dispatch" (the
+            # backend's threshold tiers) + one "policy" (the final
+            # decision) carrying first_id + per-row tiers — the export
+            # walker re-expands them into per-request timelines.
+            # ndarrays go in raw: the tracer's _jsonable hits the
+            # one-shot ndarray->tolist branch instead of walking a
+            # python list per element (measured on the 5% overhead gate)
+            tr = self.obs.tracer
+            bt = tiers if backend_tiers is None else backend_tiers
+            tr.event("dispatch", first_id=first_id,
+                     tiers=np.asarray(bt), metric=metric_name)
+            attrs = {"first_id": first_id, "kind": self.policy.kind,
+                     "tiers": np.asarray(tiers)}
+            if backend_tiers is not None and \
+                    not np.array_equal(bt, tiers):
+                attrs["tiers_in"] = np.asarray(bt)  # policy overrode rows
+            if decision is not None and decision.info:
+                attrs.update(decision.info)
+            tr.event("policy", **attrs)
+            if recalibrated:
+                tr.event("recalibrate", first_id=first_id,
+                         thresholds=list(self.router.thresholds))
         return first_id, metric_name, recalibrated

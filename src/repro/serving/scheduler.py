@@ -69,8 +69,13 @@ class TierScheduler:
 
     def __init__(self, tier: int, replicas: list[Replica],
                  batch_slots: int = 8, base_token_time: float = 0.01,
-                 max_redispatch: int = 1):
+                 max_redispatch: int = 1, mode: str = "kg_rag"):
         self.tier = tier
+        # Execution mode this pool serves (``no_rag`` / ``kg_rag`` /
+        # ``long_context``). Pure metadata to the scheduler itself; the
+        # loadgen runners consult it when sizing request prompts, so a
+        # ``no_rag`` tier never pays retrieval-context decode time.
+        self.mode = mode
         self.replicas = {r.replica_id: r for r in replicas}
         self.batch_slots = batch_slots
         self.base_token_time = base_token_time
